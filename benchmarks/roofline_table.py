@@ -1,0 +1,63 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table (deliverable g).
+
+Also emits the markdown table embedded in EXPERIMENTS.md. Run after
+``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def rows():
+    out = []
+    for r in load_records():
+        if r.get("status") != "ok":
+            continue
+        bound_ms = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e3
+        out.append((f"roofline/{r['cell']}", bound_ms * 1e3,
+                    round(r["roofline_fraction"], 4)))
+    return out
+
+
+def markdown_table(mesh_filter: str = "16x16") -> str:
+    recs = [r for r in load_records()
+            if r.get("mesh") == mesh_filter or r.get("status") == "skipped"]
+    lines = [
+        "| cell | t_compute | t_memory | t_collective | bottleneck | "
+        "useful (MODEL/HLO) | roofline frac | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    seen_skip = set()
+    for r in recs:
+        if r.get("status") == "skipped":
+            cell = r["cell"].split("@")[0]
+            if cell in seen_skip:
+                continue
+            seen_skip.add(cell)
+            lines.append(f"| {cell} | — | — | — | SKIPPED | — | — | — |")
+            continue
+        mem = r.get("memory_per_device", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 1e9
+        lines.append(
+            f"| {r['cell'].split('@')[0]} "
+            f"| {r['t_compute_s']*1e3:.2f} ms | {r['t_memory_s']*1e3:.2f} ms "
+            f"| {r['t_collective_s']*1e3:.2f} ms | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {hbm:.2f} GB |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

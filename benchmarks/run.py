@@ -1,0 +1,26 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables, roofline_table
+
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in kernel_bench.rows():
+        print(f"{name},{us:.2f},{derived}")
+    rl = roofline_table.rows()
+    if not rl:
+        print("roofline/NO_DRYRUN_RECORDS,0,run `python -m repro.launch.dryrun --all`")
+    for name, us, derived in rl:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

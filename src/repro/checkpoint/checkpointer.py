@@ -1,0 +1,133 @@
+"""Sharding-aware async checkpointing (no orbax in this environment).
+
+Layout per step:  <dir>/step_<n>/
+    index.json            tree structure + shapes/dtypes + save metadata
+    arrays.npz            one entry per leaf (gathered host values)
+    COMMIT                written last — a checkpoint without it is partial
+                          and ignored on restore (atomicity)
+
+* ``save`` gathers leaves to host (process 0 in a real multi-host fleet) and
+  writes in a background thread — the train loop is blocked only for the
+  device->host copy, not the disk write.
+* ``restore`` is ELASTIC: it re-device_puts every leaf with the *target*
+  sharding, which may be a different mesh shape than the one that saved
+  (node failure -> restore on the survivors). Verified by tests on a
+  host-device mesh.
+* ``keep`` retains the latest k checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False) -> pathlib.Path:
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device->host copy
+        treedef = jax.tree.structure(tree)
+        path = self.dir / f"step_{step:08d}"
+
+        def _write():
+            tmp = path.with_suffix(".tmp")
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **host)
+            index = {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                         for k, v in host.items()},
+            }
+            (tmp / "index.json").write_text(json.dumps(index, indent=2))
+            (tmp / "COMMIT").write_text("ok")
+            if path.exists():
+                shutil.rmtree(path)
+            tmp.rename(path)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and (p / "COMMIT").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: int | None = None, shardings=None):
+        """Restore into the structure of ``target_tree`` (values or
+        ShapeDtypeStructs). ``shardings``: matching tree of NamedSharding for
+        elastic placement on the current mesh; None -> plain host arrays."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / "arrays.npz")
+        flat_target = _flatten(target_tree)
+        missing = set(flat_target) - set(data.files)
+        if missing:
+            raise KeyError(f"checkpoint at step {step} missing keys: {sorted(missing)[:5]}")
+
+        restored_flat = {}
+        flat_sh = _flatten(shardings) if shardings is not None else {}
+        for k, tgt in flat_target.items():
+            arr = data[k]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"{k}: ckpt shape {arr.shape} != target {tgt.shape}")
+            if shardings is not None:
+                restored_flat[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                restored_flat[k] = arr
+        # rebuild tree in target order
+        leaves_with_path = jax.tree_util.tree_leaves_with_path(target_tree)
+        ordered = []
+        for pth, _ in leaves_with_path:
+            key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+            ordered.append(restored_flat[key])
+        return jax.tree.unflatten(jax.tree.structure(target_tree), ordered), step

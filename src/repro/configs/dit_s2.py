@@ -1,0 +1,19 @@
+"""dit-s2 [arXiv:2212.09748; paper] — DiT-S/2: 12L, d=384, 6H, patch 2 on the
+32x32x4 VAE latent of a 256px image."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, DIFFUSION_SHAPES
+from repro.models.dit import DiTConfig
+
+CONFIG = DiTConfig(img_res=256, patch=2, n_layers=12, d_model=384, n_heads=6,
+                   n_classes=1000, dtype=jnp.bfloat16)
+
+SMOKE = DiTConfig(img_res=64, patch=2, n_layers=2, d_model=64, n_heads=4,
+                  n_classes=10, dtype=jnp.float32)
+
+ARCH = ArchSpec(
+    name="dit-s2", family="dit", config=CONFIG, smoke_config=SMOKE,
+    shapes=DIFFUSION_SHAPES, train_profile="tp", serve_profile="tp",
+    source="arXiv:2212.09748",
+    notes="DiT is a ViT over latent patches: Janus ToMe pruning applies per "
+          "denoise forward (ToMe-for-SD precedent); splitting applies too.")

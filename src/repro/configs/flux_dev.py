@@ -1,0 +1,25 @@
+"""flux-dev [BFL tech report; unverified] — MMDiT rectified flow, 12B params.
+
+19 double + 38 single blocks, d_model=3072, 24H; 1024px -> 128px latent (16ch),
+patch 2 -> 4096 img tokens. Text frontend is a stub (precomputed T5/CLIP
+embeddings in input_specs), per the assignment's modality-stub rule.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, DIFFUSION_SHAPES
+from repro.models.flux import FluxConfig
+
+CONFIG = FluxConfig(img_res=1024, patch=2, latent_channels=16, d_model=3072,
+                    n_heads=24, n_double=19, n_single=38, txt_len=512,
+                    t5_dim=4096, clip_dim=768, dtype=jnp.bfloat16, remat=True)
+
+SMOKE = FluxConfig(img_res=64, patch=2, latent_channels=16, d_model=64,
+                   n_heads=4, n_double=2, n_single=2, txt_len=8, t5_dim=32,
+                   clip_dim=16, dtype=jnp.float32)
+
+ARCH = ArchSpec(
+    name="flux-dev", family="flux", config=CONFIG, smoke_config=SMOKE,
+    shapes=DIFFUSION_SHAPES, train_profile="fsdp_tp", serve_profile="fsdp_tp",
+    source="BFL tech report (unverified)",
+    notes="12B params: FSDP+TP required even for serving shapes. ToMe applies "
+          "to the img token stream.")

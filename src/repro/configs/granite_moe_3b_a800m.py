@@ -1,0 +1,36 @@
+"""granite-moe-3b-a800m [hf:ibm-granite; hf] — MoE GQA LM.
+
+32L, d_model=1536, 24 q heads (GQA kv=8), per-expert d_ff=512,
+vocab=49155, MoE 40 experts top-8 (assignment line; the bracketed hf tag
+mentions 32e/top-8 for the 1b variant — we implement the assignment's 40e).
+
+40 experts don't divide the 16-way model axis -> zero-padded to 48 for EP
+(DESIGN.md §4); vocab 49155 is indivisible by 16 so vocab sharding falls back
+to replicated via the rules' divisibility fallback.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES
+from repro.models.lm import LMConfig
+from repro.models.moe import MoEConfig
+
+MOE = MoEConfig(d_model=1536, d_ff=512, n_experts=40, top_k=8,
+                capacity_factor=1.25, group_size=512, n_experts_padded=48)
+
+CONFIG = LMConfig(
+    n_layers=32, d_model=1536, n_heads=24, n_kv=8, d_ff=0, vocab=49155,
+    head_dim=64, norm="rms", act="swiglu", attn_bias=False, rope_theta=1e4,
+    tie_embeddings=True, moe=MOE, dtype=jnp.bfloat16, remat=True)
+
+SMOKE = LMConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=0, vocab=131,
+    head_dim=16, norm="rms", act="swiglu", attn_bias=False,
+    tie_embeddings=True, dtype=jnp.float32,
+    moe=MoEConfig(d_model=64, d_ff=32, n_experts=5, top_k=2, group_size=32,
+                  n_experts_padded=8))
+
+ARCH = ArchSpec(
+    name="granite-moe-3b-a800m", family="lm", config=CONFIG, smoke_config=SMOKE,
+    shapes=LM_SHAPES, train_profile="fsdp_ep_tp", serve_profile="ep_tp",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base (family)",
+    notes="long_500k skipped: pure full-attention GQA. Experts padded 40->48.")

@@ -1,0 +1,25 @@
+"""internlm2-1.8b [arXiv:2403.17297; hf] — dense GQA LM (llama-style).
+
+24L, d_model=2048, 16 q heads (GQA kv=8), d_ff=8192, vocab=92544.
+RMSNorm + SwiGLU, no biases, RoPE.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    n_layers=24, d_model=2048, n_heads=16, n_kv=8, d_ff=8192, vocab=92544,
+    head_dim=128, norm="rms", act="swiglu", attn_bias=False, rope_theta=1e6,
+    tie_embeddings=False, dtype=jnp.bfloat16, remat=True)
+
+SMOKE = LMConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=128,
+    head_dim=16, norm="rms", act="swiglu", attn_bias=False,
+    tie_embeddings=False, dtype=jnp.float32)
+
+ARCH = ArchSpec(
+    name="internlm2-1.8b", family="lm", config=CONFIG, smoke_config=SMOKE,
+    shapes=LM_SHAPES, train_profile="fsdp_tp", serve_profile="tp",
+    source="arXiv:2403.17297; hf",
+    notes="long_500k skipped: pure full-attention GQA (DESIGN.md).")

@@ -1,0 +1,25 @@
+"""starcoder2-3b [arXiv:2402.19173; hf] — dense GQA LM.
+
+30L, d_model=3072, 24 q heads (GQA kv=2), d_ff=12288, vocab=49152.
+StarCoder2 uses LayerNorm + gelu MLP with biases, RoPE, tied embeddings.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    n_layers=30, d_model=3072, n_heads=24, n_kv=2, d_ff=12288, vocab=49152,
+    head_dim=128, norm="ln", act="gelu", attn_bias=True, rope_theta=1e5,
+    tie_embeddings=True, dtype=jnp.bfloat16, remat=True)
+
+SMOKE = LMConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=256, vocab=128,
+    head_dim=16, norm="ln", act="gelu", attn_bias=True,
+    tie_embeddings=True, dtype=jnp.float32)
+
+ARCH = ArchSpec(
+    name="starcoder2-3b", family="lm", config=CONFIG, smoke_config=SMOKE,
+    shapes=LM_SHAPES, train_profile="fsdp_tp", serve_profile="tp",
+    source="arXiv:2402.19173; hf",
+    notes="long_500k skipped: pure full-attention GQA (DESIGN.md).")

@@ -1,0 +1,13 @@
+"""Janus core: the paper's primary contribution.
+
+pruning    — §III-A mixed (exponential-declining) pruning policy (Eq. 1-2)
+tome       — ToMe bipartite token merging (the pruning mechanism)
+splitter   — §III-B fine-to-coarse split-point generation (Eq. 3)
+profiler   — §III-C lightweight linear latency profiler
+scheduler  — §III-D dynamic scheduler (Algorithm 1)
+bandwidth  — harmonic-mean estimator + dynamic network traces
+compression— §IV-A LZW payload compression
+engine     — §IV Jdevice/Jcloud execution engine + baselines
+"""
+from repro.core import (bandwidth, compression, engine, profiler, pruning,
+                        scheduler, splitter, tome)

@@ -1,0 +1,226 @@
+"""Janus §IV: execution engine — Jdevice / Jcloud runtime.
+
+Simulates the two-tier deployment end-to-end over a network trace:
+
+  per frame:  estimate bandwidth (harmonic mean of past observations)
+              -> dynamic scheduler picks (α, split)
+              -> device partition runs layers [0, s) (with the mixed pruning
+                 schedule), LZW-compresses the pruned intermediate
+              -> transfer at the *actual* trace bandwidth
+              -> cloud partition runs layers [s, N) + head
+
+The *math* path (``execute=True``) really runs both partitions — split
+inference is verified elsewhere to equal the monolithic forward — while the
+*latency* path accounts device/cloud compute via the fitted linear profilers
+(exactly the quantities the paper's scheduler reasons about) plus the measured
+payload size over the trace bandwidth. ``execute=False`` skips the math for
+long trace sweeps (benchmarks) and uses the schedule-derived payload size.
+
+Baselines (§V-B): Device-Only / Cloud-Only / Mixed (NeuroSurgeon degenerates to
+Mixed for ViTs), each with ToMe's maximum fixed pruning level.
+
+Fault story: a blocked network (bandwidth ~ 0) drives the scheduler to the
+device-only split — Janus's scheduler *is* the failover path for network
+partitions (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, pruning, scheduler as sched_lib
+from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
+from repro.core.pruning import AccuracyModel
+from repro.core.scheduler import Decision, ModelProfile
+from repro.models import vit as vit_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    sla_s: float
+    t: float = 0.01
+    k: int = 5
+    quantize_payload: bool = True
+    execute: bool = False
+    baseline_fixed_r: int = 23  # ToMe max fixed pruning (ViT-L@384; §V-B)
+
+
+@dataclasses.dataclass
+class FrameResult:
+    latency_s: float
+    violated: bool
+    deviation: float
+    alpha: float
+    split: int
+    accuracy: float
+    payload_bytes: float
+    bandwidth_bps: float
+
+
+@dataclasses.dataclass
+class RunStats:
+    frames: list[FrameResult]
+
+    @property
+    def violation_ratio(self) -> float:
+        return float(np.mean([f.violated for f in self.frames]))
+
+    @property
+    def avg_throughput_fps(self) -> float:
+        total = sum(f.latency_s for f in self.frames)
+        return len(self.frames) / total if total > 0 else float("inf")
+
+    @property
+    def avg_latency_s(self) -> float:
+        return float(np.mean([f.latency_s for f in self.frames]))
+
+    @property
+    def avg_accuracy(self) -> float:
+        return float(np.mean([f.accuracy for f in self.frames]))
+
+    @property
+    def avg_deviation(self) -> float:
+        return float(np.mean([f.deviation for f in self.frames]))
+
+
+# ---------------------------------------------------------------------------
+# split execution (the real math path)
+# ---------------------------------------------------------------------------
+
+
+def device_forward(params: dict, cfg: vit_lib.ViTConfig, images: jax.Array,
+                   schedule: Sequence[int], split: int, scores_fn=None):
+    """Jdevice: embed + layers [0, split). Returns (x, sizes)."""
+    x = vit_lib.embed_tokens(params, cfg, images)
+    sizes = jnp.ones(x.shape[:2], cfg.dtype)
+    return vit_lib.run_blocks(params, cfg, x, sizes, schedule, 0, split, scores_fn=scores_fn)
+
+
+def cloud_forward(params: dict, cfg: vit_lib.ViTConfig, x: jax.Array, sizes: jax.Array,
+                  schedule: Sequence[int], split: int, scores_fn=None) -> jax.Array:
+    """Jcloud: layers [split, N) + head."""
+    x, _ = vit_lib.run_blocks(params, cfg, x, sizes, schedule, split, cfg.n_layers,
+                              scores_fn=scores_fn)
+    return vit_lib.head_apply(params, cfg, x)
+
+
+def split_inference(params: dict, cfg: vit_lib.ViTConfig, images: jax.Array,
+                    schedule: Sequence[int], split: int, *,
+                    quantize: bool = False, scores_fn=None):
+    """Full Jdevice->wire->Jcloud round trip. Returns (logits, payload|None)."""
+    n = cfg.n_layers
+    split = min(max(split, 0), n + 1)
+    s = n if split == n + 1 else split
+    x, sizes = device_forward(params, cfg, images, schedule, s, scores_fn=scores_fn)
+    payload = None
+    if split not in (0, n + 1):
+        payload = compression.activation_payload(x, quantize=quantize)
+        x = jnp.asarray(compression.decode_activation(payload), dtype=cfg.dtype)
+    logits = cloud_forward(params, cfg, x, sizes, schedule, s, scores_fn=scores_fn)
+    return logits, payload
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class JanusEngine:
+    def __init__(self, profile: ModelProfile, engine_cfg: EngineConfig,
+                 acc_model: AccuracyModel | None = None,
+                 model_cfg: vit_lib.ViTConfig | None = None,
+                 params: dict | None = None):
+        self.profile = profile
+        self.cfg = engine_cfg
+        self.acc = acc_model or AccuracyModel()
+        self.model_cfg = model_cfg
+        self.params = params
+        self._estimator = HarmonicMeanEstimator()
+
+    # -- latency accounting -------------------------------------------------
+    def _account(self, counts: Sequence[int], split: int, payload_bytes: float,
+                 bandwidth_bps: float, rtt_s: float) -> float:
+        p = self.profile
+        n = p.n_layers
+        if split == 0:
+            comm = p.raw_input_bytes * 8 / bandwidth_bps + rtt_s
+            compute = p.cloud_embed_s + sum(p.cloud.predict(counts[l]) for l in range(n)) + p.head_s
+            return comm + compute
+        if split == n + 1:
+            return p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(n)) + p.head_s
+        dev = p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(split))
+        comm = payload_bytes * 8 / bandwidth_bps + rtt_s
+        cloud = sum(p.cloud.predict(counts[l]) for l in range(split, n)) + p.head_s
+        return dev + comm + cloud
+
+    def _payload_bytes(self, counts: Sequence[int], split: int) -> float:
+        if split in (0, self.profile.n_layers + 1):
+            return 0.0
+        return counts[split] * self.profile.token_bytes
+
+    def _decide(self, policy: str, bandwidth_est: float, rtt_s: float) -> Decision:
+        p, c = self.profile, self.cfg
+        n, x0 = p.n_layers, p.x0
+        if policy == "janus":
+            return sched_lib.schedule(p, bandwidth_est, rtt_s, c.sla_s, t=c.t, k=c.k)
+        fixed = tuple(pruning.clamp_schedule(
+            pruning.fixed_schedule(c.baseline_fixed_r, n), x0))
+        counts = pruning.token_counts(x0, fixed)
+        if policy == "device":
+            return Decision(0.0, n + 1, self._account(counts, n + 1, 0, bandwidth_est, rtt_s),
+                            True, fixed)
+        if policy == "cloud":
+            return Decision(0.0, 0, self._account(counts, 0, 0, bandwidth_est, rtt_s),
+                            True, fixed)
+        if policy == "mixed":  # NeuroSurgeon-for-ViT: pick the better endpoint
+            lat_d = self._account(counts, n + 1, 0, bandwidth_est, rtt_s)
+            lat_c = self._account(counts, 0, 0, bandwidth_est, rtt_s)
+            s = n + 1 if lat_d <= lat_c else 0
+            return Decision(0.0, s, min(lat_d, lat_c), True, fixed)
+        raise ValueError(policy)
+
+    # -- main loop ------------------------------------------------------------
+    def run_trace(self, trace: NetworkTrace, n_frames: int, policy: str = "janus",
+                  images: jax.Array | None = None) -> RunStats:
+        self._estimator = HarmonicMeanEstimator(
+            cold_start_bps=float(np.mean(trace.bps)))
+        frames: list[FrameResult] = []
+        for i in range(n_frames):
+            b_est = self._estimator.estimate()
+            dec = self._decide(policy, b_est, trace.rtt_s)
+            counts = pruning.token_counts(self.profile.x0, dec.schedule)
+            b_true = trace.at(i)
+
+            payload_bytes = self._payload_bytes(counts, dec.split)
+            if self.cfg.execute and self.params is not None and images is not None:
+                # the timing plane may model a bigger ViT than the executed
+                # one — remap (alpha, split) onto the executed geometry
+                n_exec = self.model_cfg.n_layers
+                sched_exec = pruning.make_schedule(
+                    self.profile.schedule_kind, dec.alpha, n_exec,
+                    self.model_cfg.num_tokens)
+                n_prof = self.profile.n_layers
+                if dec.split >= n_prof + 1:
+                    split_exec = n_exec + 1
+                else:
+                    split_exec = min(round(dec.split * n_exec / n_prof), n_exec)
+                _, payload = split_inference(self.params, self.model_cfg, images,
+                                             sched_exec, split_exec,
+                                             quantize=self.cfg.quantize_payload)
+                if payload is not None:
+                    payload_bytes = payload.nbytes
+
+            lat = self._account(counts, dec.split, payload_bytes, b_true, trace.rtt_s)
+            lat += dec.scheduler_overhead_s
+            acc = self.acc.accuracy(self.profile.x0, dec.schedule)
+            frames.append(FrameResult(
+                latency_s=lat, violated=lat > self.cfg.sla_s,
+                deviation=max(0.0, (lat - self.cfg.sla_s) / self.cfg.sla_s),
+                alpha=dec.alpha, split=dec.split, accuracy=acc,
+                payload_bytes=payload_bytes, bandwidth_bps=b_true))
+            self._estimator.observe(b_true)
+        return RunStats(frames)

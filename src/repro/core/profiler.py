@@ -1,0 +1,123 @@
+"""Janus §III-C: lightweight linear profiler.
+
+The paper observes per-layer ViT latency is strongly linear in the input token
+count (r > 0.85) on both the edge device and the cloud server, and fits one
+least-squares linear model per (model, platform).
+
+We reproduce that exactly (``fit_linear`` / ``LinearProfiler``). Because this
+container has no TPU to time, platform *samples* come from either:
+
+  * ``AnalyticalPlatform`` — a roofline latency model (FLOPs/peak vs bytes/bw
+    with a fixed launch overhead). Note the true per-layer cost has a quadratic
+    attention term; the *linear* profiler fits it anyway — reproducing the
+    paper's "strong positive linear relationship" observation (Fig. 5), and the
+    residual is visible in benchmarks/fig5_linearity.py.
+  * measured wall-clock of the jitted layer on this host (used by tests to
+    show the fit quality on real timings too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+def fit_linear(samples: Sequence[tuple[float, float]]) -> tuple[float, float, float]:
+    """Least-squares fit latency = a*tokens + b. Returns (a, b, pearson_r)."""
+    x = np.asarray([s[0] for s in samples], dtype=np.float64)
+    y = np.asarray([s[1] for s in samples], dtype=np.float64)
+    a, b = np.polyfit(x, y, 1)
+    if len(x) > 2 and np.std(x) > 0 and np.std(y) > 0:
+        r = float(np.corrcoef(x, y)[0, 1])
+    else:
+        r = 1.0
+    return float(a), float(b), r
+
+
+@dataclasses.dataclass
+class LinearProfiler:
+    """Per-(model, platform) linear latency predictor (seconds per layer)."""
+    a: float
+    b: float
+    r: float = 1.0
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[tuple[float, float]]) -> "LinearProfiler":
+        a, b, r = fit_linear(samples)
+        return cls(a, b, r)
+
+    def predict(self, tokens: int | np.ndarray) -> float | np.ndarray:
+        return self.a * tokens + self.b
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticalPlatform:
+    """Roofline latency model for one platform tier.
+
+    Defaults for the two tiers used in benchmarks (loosely calibrated to the
+    paper's hardware so Table-I/Fig-2-scale numbers come out comparable):
+      edge  ~ Jetson Orin Nano-class:  ~20 TFLOP/s fp16 peak, 0.4 efficiency,
+              68 GB/s LPDDR5
+      cloud ~ V100-class:             ~112 TFLOP/s fp16 peak, 0.5 efficiency,
+              900 GB/s HBM2
+    """
+    name: str
+    peak_flops: float
+    mem_bw: float
+    efficiency: float = 0.4
+    overhead_s: float = 2e-4  # per-layer launch overhead
+
+    def layer_latency(self, tokens: int, d_model: int, d_ff: int) -> float:
+        """One transformer block at ``tokens`` input tokens."""
+        x = float(tokens)
+        proj_flops = 2 * x * (4 * d_model * d_model + 2 * d_model * d_ff)
+        attn_flops = 2 * 2 * x * x * d_model
+        flops = proj_flops + attn_flops
+        bytes_moved = 2.0 * (4 * d_model * d_model + 2 * d_model * d_ff)  # weights (fp16)
+        bytes_moved += 2.0 * 8 * x * d_model  # activations in/out of sub-ops
+        t = max(flops / (self.peak_flops * self.efficiency), bytes_moved / self.mem_bw)
+        return t + self.overhead_s
+
+    def embed_latency(self, tokens: int, d_model: int, patch_dim: int) -> float:
+        flops = 2 * tokens * patch_dim * d_model
+        return flops / (self.peak_flops * self.efficiency) + self.overhead_s
+
+    def head_latency(self, d_model: int, n_classes: int) -> float:
+        return 2 * d_model * n_classes / (self.peak_flops * self.efficiency) + self.overhead_s
+
+
+# Calibrated so ViT-L@384 (24L, d=1024, ff=4096, 577 tokens) reproduces the
+# paper's measurements: edge no-pruning 653.3 ms (Table I), cloud 32.3 ms;
+# and ViT-B@224 cloud ~3.9 ms (Fig. 2). See tests/test_profiler_calibration.py.
+EDGE_PLATFORM = AnalyticalPlatform("jetson-orin-nano", peak_flops=5e12, mem_bw=68e9,
+                                   efficiency=0.119, overhead_s=5e-4)
+CLOUD_PLATFORM = AnalyticalPlatform("v100", peak_flops=112e12, mem_bw=900e9,
+                                    efficiency=0.114, overhead_s=1e-4)
+# TPU tiers for the framework deployment story (DESIGN.md §2)
+TPU_EDGE_SLICE = AnalyticalPlatform("v5e-1chip", peak_flops=197e12, mem_bw=819e9,
+                                    efficiency=0.5, overhead_s=5e-5)
+TPU_POD_SLICE = AnalyticalPlatform("v5e-16chip", peak_flops=16 * 197e12, mem_bw=16 * 819e9,
+                                   efficiency=0.45, overhead_s=1e-4)
+
+
+def profile_platform(platform: AnalyticalPlatform, d_model: int, d_ff: int,
+                     token_grid: Sequence[int]) -> LinearProfiler:
+    samples = [(t, platform.layer_latency(t, d_model, d_ff)) for t in token_grid]
+    return LinearProfiler.from_samples(samples)
+
+
+def profile_measured(layer_fn: Callable[[int], None], token_grid: Sequence[int],
+                     repeats: int = 3) -> LinearProfiler:
+    """Fit from wall-clock measurements of ``layer_fn(tokens)`` (pre-jitted)."""
+    samples = []
+    for t in token_grid:
+        layer_fn(t)  # warmup/compile
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            layer_fn(t)
+            times.append(time.perf_counter() - t0)
+        samples.append((t, min(times)))
+    return LinearProfiler.from_samples(samples)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots (DESIGN.md §2):
+
+tome_scores      — ToMe bipartite cosine scores + streaming row-argmax
+flash_attention  — fused online-softmax attention (ViT / LM prefill)
+decode_attention — single-position GQA decode over a KV cache
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py; validated
+in interpret mode on CPU, compiled natively on TPU.
+"""
+from repro.kernels import ops, ref

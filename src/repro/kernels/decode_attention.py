@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-position GQA decode attention over a KV cache.
+
+The serving hot loop: one query token per sequence attends over a long cache.
+Memory-bound (the whole cache streams HBM->VMEM once); the kernel fuses the
+masked online-softmax so nothing but q, per-tile kv and the [Hq, D] accumulator
+lives in VMEM.
+
+Layout: q [B, Hq, D]; cache k/v [B, S, Hkv, D]; grid (B, Hkv, S/bs) with the
+cache axis innermost. Each (batch, kv-head) program streams its cache slice and
+serves its group of Hq/Hkv query heads at once (group*D wide accumulator).
+Valid length masks tile-internally (cache buffers are fixed-capacity).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            bs: int, s_total: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # [g, d]
+    k = k_ref[0, :, 0].astype(jnp.float32)   # [bs, d]
+    v = v_ref[0, :, 0].astype(jnp.float32)   # [bs, d]
+    length = len_ref[0]
+
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (k.shape[0],), 0) + j * bs
+    valid = jnp.logical_and(kpos < length, kpos < s_total)
+    k = jnp.where(valid[:, None], k, 0.0)
+    v = jnp.where(valid[:, None], v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [g, bs]
+    s = s * (1.0 / math.sqrt(q.shape[-1]))
+    s = jnp.where(valid[None, :], s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_prev * alpha + jnp.sum(p, axis=1)
+    o_ref[0, 0] = o_ref[0, 0] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, bs: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, D]; k,v: [B, S, Hkv, D]; length: scalar valid cache length."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bs = min(bs, s)
+    qg = q.reshape(b, hkv, g, d)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    grid = (b, hkv, pl.cdiv(s, bs))
+    kernel = functools.partial(_kernel, bs=bs, s_total=s)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, j: (b_,)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h, j: (b_, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused (flash) attention forward.
+
+Online-softmax tiling: grid (B*H, Sq/bq, Sk/bk) with the Sk axis innermost;
+q-tile [bq, D], k/v-tiles [bk, D] live in VMEM; running (m, l) statistics and
+the unnormalized accumulator revisit the same output VMEM block across the Sk
+axis, normalizing on the last step. Causal masking skips nothing structurally
+(TPU grids are dense) but masks tile-internally; MXU-aligned defaults
+bq = bk = 128. D kept whole (<= 256 for all our archs).
+
+Used for ViT/DiT(S >= 256 tokens) and LM prefill; decode has its own kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            bq: int, bk: int, sk_total: int, sq_total: int, causal: bool,
+            scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)   # [bq, d]
+    k = k_ref[0].astype(jnp.float32)   # [bk, d]
+    v = v_ref[0].astype(jnp.float32)   # [bk, d]
+    # sanitize OOB-padded kv rows (interpret mode pads with NaN; 0*NaN = NaN
+    # would otherwise leak through the p @ v product)
+    krow = jax.lax.broadcasted_iota(jnp.int32, k.shape, 0) + j * bk
+    kv_valid = krow < sk_total
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    kpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * bk
+    mask = kpos < sk_total
+    if causal:
+        qpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + i * bq
+        mask = jnp.logical_and(mask, qpos + (sk_total - sq_total) >= kpos)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[0]                       # [bq]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    o_ref[0] = o_ref[0] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, H, S, D] (equal head counts) -> [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    grid = (b * h, pl.cdiv(sq, bq), pl.cdiv(sk, bk))
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, sk_total=sk, sq_total=sq,
+                               causal=causal, scale=1.0 / math.sqrt(d))
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bq), lambda g, i, j: (g, i)),
+            pl.BlockSpec((1, bq), lambda g, i, j: (g, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively (``interpret=False``); on this CPU
+container they run in interpret mode for correctness, and the *models* default
+to the pure-jnp path (``ref``/layers math) so the dry-run roofline reflects the
+XLA program. ``use_kernels()`` flips model hot-spots to the Pallas path.
+
+Every wrapper keeps the oracle's exact signature so tests can sweep
+shapes/dtypes with assert_allclose against ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.tome_scores import tome_scores as _tome_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def tome_scores(a, b, *, use_pallas: bool | None = None):
+    """(node_max, node_idx) for ToMe bipartite matching."""
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return _tome_pallas(a, b, interpret=not _on_tpu())
+    return ref.tome_scores_ref(a, b)
+
+
+def flash_attention(q, k, v, *, causal: bool = False, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal=causal, interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, length, *, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return _decode_pallas(q, k, v, length, interpret=not _on_tpu())
+    return ref.decode_attention_ref(q, k, v, length)
+
+
+def tome_scores_fn(use_pallas: bool = True):
+    """A ``scores_fn`` suitable for core.tome.bipartite_soft_matching."""
+    def fn(a, b):
+        return tome_scores(a, b, use_pallas=use_pallas)
+    return fn

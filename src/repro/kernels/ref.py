@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tome_scores_ref(a: jax.Array, b: jax.Array):
+    """Cosine-similarity bipartite scores + row argmax.
+
+    a: [B, Na, D], b: [B, Nb, D] (callers pass L2-normalized metrics).
+    Returns (node_max [B, Na] f32, node_idx [B, Na] int32).
+    """
+    scores = jnp.einsum("bnd,bmd->bnm", a.astype(jnp.float32), b.astype(jnp.float32))
+    return scores.max(axis=-1), scores.argmax(axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = False) -> jax.Array:
+    """q,k,v: [B, H, S, D] (same head count; GQA repeat happens in ops)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(d))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :] - (sk - sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """Single-position GQA decode attention over a KV cache.
+
+    q: [B, Hq, D]; k,v: [B, S, Hkv, D]; length: scalar int (valid cache len).
+    Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(d))
+    valid = jnp.arange(k.shape[1]) < length
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: ToMe bipartite cosine scores + streaming row-argmax.
+
+The ToMe hot spot is an O(Na·Nb·D) similarity matrix whose only consumer is a
+per-row (max, argmax) — materializing the [Na, Nb] matrix in HBM wastes both
+bandwidth and memory. This kernel computes scores tile-by-tile on the MXU and
+keeps only the running (max, argmax) per row in VMEM — the same online
+reduction trick flash-attention uses for softmax, applied to argmax.
+
+Tiling: grid (B, Na/bm, Nb/bn); a-tile [bm, D] and b-tile [bn, D] in VMEM, D is
+kept whole (metric dims are <= head_dim-scale). The two outputs (max [bm],
+idx [bm]) revisit the same VMEM block across the Nb axis (innermost grid dim).
+MXU-aligned defaults bm = bn = 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, max_ref, idx_ref, *, bn: int, nb_total: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # [bm, d]
+    b = b_ref[0].astype(jnp.float32)          # [bn, d]
+    scores = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [bm, bn]
+    # mask padding columns in the final tile
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + j * bn
+    scores = jnp.where(col < nb_total, scores, -jnp.inf)
+
+    local_max = jnp.max(scores, axis=1)
+    local_idx = jnp.argmax(scores, axis=1).astype(jnp.int32) + j * bn
+
+    run_max = max_ref[...]
+    take_new = local_max > run_max
+    max_ref[...] = jnp.where(take_new, local_max, run_max)
+    idx_ref[...] = jnp.where(take_new, local_idx, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def tome_scores(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                interpret: bool = True):
+    """a: [B, Na, D], b: [B, Nb, D] -> (node_max [B, Na] f32, node_idx int32)."""
+    B, na, d = a.shape
+    nb = b.shape[1]
+    bm = min(bm, na)
+    bn = min(bn, nb)
+    grid = (B, pl.cdiv(na, bm), pl.cdiv(nb, bn))
+    kernel = functools.partial(_kernel, bn=bn, nb_total=nb)
+    out_max, out_idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bn, d), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda b_, i, j: (b_, i)),
+            pl.BlockSpec((1, bm), lambda b_, i, j: (b_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, na), jnp.float32),
+            jax.ShapeDtypeStruct((B, na), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return out_max, out_idx

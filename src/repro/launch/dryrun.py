@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (brief: MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) cell: build the step bundle, lower +
+compile it against the production mesh (single-pod 16x16 = 256 chips, and
+multi-pod 2x16x16 = 512 chips), print memory_analysis / cost_analysis, derive
+the roofline terms, and write a JSON record under experiments/dryrun/.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); smoke tests and benches do NOT import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch vit-b16 --shape serve_b1
+  PYTHONPATH=src python -m repro.launch.dryrun --arch vit-b16 --shape cls_224 --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import SkipShape, build_bundle
+from repro.runtime import roofline
+from repro.runtime.flags import unrolled_costs
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, verbose: bool = True) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}/{shape}@{mesh_name}"
+    try:
+        bundle = build_bundle(arch, shape, mesh)
+    except SkipShape as e:
+        rec = {"cell": cell, "status": "skipped", "reason": e.reason}
+        if verbose:
+            print(f"[dryrun] {cell}: SKIPPED ({e.reason})")
+        return rec
+
+    # 1) rolled program: the artifact that would run — compile it.
+    compiled = bundle.lower().compile()
+    mem = roofline.memory_analysis_dict(compiled)
+    # 2) unrolled lowering (no compile): exact global FLOPs. Build a FRESH
+    #    bundle inside the flag context — jit's trace cache is keyed on the
+    #    function object and would otherwise reuse the rolled trace.
+    with unrolled_costs():
+        ub = build_bundle(arch, shape, mesh)
+        ucost = ub.lower().cost_analysis()
+    if isinstance(ucost, (list, tuple)):
+        ucost = ucost[0]
+    uflops = float(ucost.get("flops", 0.0))
+    rl = roofline.analyze(cell, compiled, chips, bundle.model_flops,
+                          n_model_shards=mesh.shape.get("model", 1),
+                          hlo_scale=bundle.hlo_scale,
+                          unrolled_global_flops=uflops)
+    rec = {"cell": cell, "status": "ok", "mesh": mesh_name, "chips": chips,
+           "compile_s": time.time() - t0, "notes": bundle.notes,
+           **rl.to_dict()}
+    if verbose:
+        print(f"[dryrun] {cell}: compiled in {rec['compile_s']:.1f}s")
+        print(f"  memory_analysis: { {k: f'{v/1e9:.3f} GB' for k, v in mem.items()} }")
+        print(f"  cost_analysis: flops/device={rl.hlo_flops_per_device:.3e} "
+              f"bytes/device={rl.hlo_bytes_per_device:.3e}")
+        print(f"  collectives: {rl.collective_counts} wire={rl.wire_bytes_per_device:.3e} B")
+        print(f"  roofline: compute={rl.t_compute*1e3:.3f}ms memory={rl.t_memory*1e3:.3f}ms "
+              f"collective={rl.t_collective*1e3:.3f}ms -> {rl.bottleneck}-bound, "
+              f"useful={rl.useful_flops_ratio:.3f} frac={rl.roofline_fraction:.3f}")
+    return rec
+
+
+def save(rec: dict):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    name = rec["cell"].replace("/", "_").replace("@", "_")
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(rec, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every arch x shape")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in list_archs():
+            if a == "janus-vit-l384":
+                continue  # paper model has its own shape set; not a graded cell
+            for s in get_arch(a).shapes:
+                cells.append((a, s.name))
+    else:
+        arch = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else [s.name for s in arch.shapes]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    failures = []
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(a, s, mp)
+                save(rec)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((a, s, mp, repr(e)))
+                save({"cell": f"{a}/{s}@{'2x16x16' if mp else '16x16'}",
+                      "status": "error", "error": repr(e)})
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

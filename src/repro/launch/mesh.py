@@ -1,0 +1,23 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. Single pod: 16x16 ("data", "model") = 256 chips; multi-pod:
+2x16x16 ("pod", "data", "model") = 512 chips. The "pod" axis folds into data
+parallelism (BATCH_AXES) everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (tests / smoke runs)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

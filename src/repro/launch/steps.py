@@ -1,0 +1,473 @@
+"""Step builders: one jit-able (step_fn, abstract inputs, shardings) bundle per
+(architecture x shape). The dry-run lowers these; the train/serve drivers run
+them; smoke tests call them eagerly on reduced configs.
+
+Sharding comes from the arch's profile via repro.sharding.rules; activation
+constraints inside the models activate through the ``use_rules`` context that
+each step_fn enters during tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import config_for_shape, get_arch
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.models import dit as dit_lib
+from repro.models import flux as flux_lib
+from repro.models import lm as lm_lib
+from repro.models import param as param_lib
+from repro.models import resnet as resnet_lib
+from repro.models import swin as swin_lib
+from repro.models import vit as vit_lib
+from repro.optim import adamw
+from repro.sharding import rules as rules_lib
+from repro.training import diffusion
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    step_fn: Callable
+    abstract_inputs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    model_flops: float       # analytic MODEL_FLOPS for the whole step
+    hlo_scale: float = 1.0   # rolled-loop multiplier for cost_analysis
+                             # (microbatch accum / sampler steps; their bodies
+                             #  are identical so scaling is exact)
+    notes: str = ""
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_inputs)
+
+
+def _specs_for(family: str, cfg):
+    return {
+        "vit": vit_lib.specs, "swin": swin_lib.specs, "resnet": resnet_lib.specs,
+        "lm": lm_lib.specs, "dit": dit_lib.specs, "flux": flux_lib.specs,
+    }[family](cfg)
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def _tree_replicated(tree, mesh):
+    rep = _replicated(mesh)
+    return jax.tree.map(lambda _: rep, tree)
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (the "useful compute" numerator for §Roofline)
+# ---------------------------------------------------------------------------
+
+
+def transformer_model_flops(n_params: int, tokens: int, train: bool) -> float:
+    return (6.0 if train else 2.0) * n_params * tokens
+
+
+def moe_active_params(cfg: lm_lib.LMConfig, specs_tree) -> int:
+    """Parameters touched per token: everything minus inactive experts."""
+    total = param_lib.param_count(specs_tree)
+    m = cfg.moe
+    per_expert = 3 * m.d_model * m.d_ff
+    inactive = (m.e_pad - m.top_k) * per_expert * cfg.n_layers
+    return total - inactive
+
+
+def swin_fwd_flops(cfg: swin_lib.SwinConfig, batch: int) -> float:
+    """Per-stage 2·params·tokens (token count shrinks 4x per stage, so the
+    flat 6ND formula over-counts ~17x) + window-attention quadratic term."""
+    f = 0.0
+    hw = cfg.img_res // cfg.patch
+    f += 2 * (cfg.patch ** 2 * cfg.in_channels) * cfg.dims[0] * hw * hw
+    for i, depth in enumerate(cfg.depths):
+        d = cfg.dims[i]
+        tokens = hw * hw
+        per_block = 4 * d * d + 2 * d * d * cfg.mlp_ratio  # qkvo + mlp
+        f += 2 * depth * per_block * tokens
+        f += depth * 2 * 2 * tokens * (cfg.window ** 2) * d  # window attn
+        if i < len(cfg.depths) - 1:
+            f += 2 * (4 * d) * cfg.dims[i + 1] * (hw // 2) ** 2
+            hw //= 2
+    f += 2 * cfg.dims[-1] * cfg.n_classes
+    return f * batch
+
+
+def flux_fwd_flops(cfg, batch: int) -> float:
+    """Stream-aware: img-side double params see n_img tokens, txt-side see
+    txt_len; single blocks see both (flat 2ND over-counts the txt stream)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    ni, nt = cfg.n_img_tokens, cfg.txt_len
+    per_stream = 4 * d * d + 2 * d * ff + 6 * d * d  # qkvo + mlp + mod
+    p_single = d * (3 * d + ff) + (d + ff) * d + 3 * d * d
+    f = 2 * cfg.n_double * (per_stream * ni + per_stream * nt)
+    f += 2 * cfg.n_single * p_single * (ni + nt)
+    f += 2 * 2 * (cfg.n_double + cfg.n_single) * (ni + nt) ** 2 * d  # joint attn
+    return f * batch
+
+
+def resnet_fwd_flops(cfg: resnet_lib.ResNetConfig, batch: int) -> float:
+    """Analytic conv MACs*2 (convs reuse params spatially: 6·N·D doesn't apply)."""
+    r = cfg.img_res
+    f = 0.0
+    f += 2 * 7 * 7 * cfg.in_channels * cfg.width * (r // 2) ** 2
+    cin = cfg.width
+    res = r // 4
+    for i, depth in enumerate(cfg.depths):
+        cmid = cfg.width * 2 ** i
+        cout = cmid * cfg.expansion
+        if i > 0:
+            res //= 2
+        for d in range(depth):
+            ci = cin if d == 0 else cout
+            f += 2 * res * res * (ci * cmid + 9 * cmid * cmid + cmid * cout)
+            if d == 0:
+                f += 2 * res * res * ci * cout
+        cin = cout
+    return f * batch
+
+
+# ---------------------------------------------------------------------------
+# per-family step builders
+# ---------------------------------------------------------------------------
+
+
+def _train_wrap(loss_fn, ocfg: adamw.AdamWConfig, rules, accum: int = 1):
+    """Train step with optional microbatch gradient accumulation: the global
+    batch splits into ``accum`` sequential microbatches (live activations
+    shrink by ``accum``; the fp32 grad accumulator is params-sharded)."""
+    def step(params, opt, batch):
+        with rules_lib.use_rules(rules):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch, opt["step"])
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                    batch)
+
+                def body(gsum, mb):
+                    l, g = jax.value_and_grad(loss_fn)(params, mb, opt["step"])
+                    gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                        gsum, g)
+                    return gsum, l
+
+                gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params)
+                grads, losses = jax.lax.scan(body, gsum0, mbs)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = jnp.mean(losses)
+            params, opt, metrics = adamw.apply_updates(ocfg, params, grads, opt)
+            return params, opt, {"loss": loss, **metrics}
+    return step
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.shape]))
+
+
+def pick_accum(global_batch: int, act_bytes_per_sample: float, dp: int,
+               target_bytes_per_device: float = 64e6) -> int:
+    """Smallest power-of-2 accumulation keeping the per-device live activation
+    carry at or under target, while each microbatch still covers the DP extent."""
+    accum = 1
+    while (global_batch // (2 * accum) >= dp
+           and global_batch % (2 * accum) == 0
+           and (global_batch / dp) * act_bytes_per_sample / accum
+               > target_bytes_per_device):
+        accum *= 2
+    return accum
+
+
+def _vision_batch(shape: ShapeSpec, cfg, dtype=jnp.float32):
+    return {"images": SDS((shape.batch, shape.img_res, shape.img_res, 3), dtype),
+            "labels": SDS((shape.batch,), jnp.int32)}
+
+
+def _ce_loss(logits, labels):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+    true = jnp.einsum("...v,...v->...", lf, oh)
+    return jnp.mean(lse - true)
+
+
+def build_bundle(arch_name: str, shape_name: str, mesh, *, smoke: bool = False,
+                 optimizer: adamw.AdamWConfig | None = None,
+                 profile_override: str | None = None,
+                 config_patch: dict | None = None,
+                 janus_alpha: float | None = None) -> StepBundle:
+    """``profile_override``/``config_patch``/``janus_alpha`` are the hillclimb
+    knobs: alternate sharding profile, model-config field overrides (e.g.
+    fused_qkv, cache_quant_scale), and the Janus ToMe schedule for ViT-family
+    serving (EXPERIMENTS.md §Perf)."""
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if shape.skip_reason and not smoke:
+        raise SkipShape(arch_name, shape_name, shape.skip_reason)
+    cfg = config_for_shape(arch, shape, smoke=smoke)
+    if config_patch:
+        cfg = dataclasses.replace(cfg, **config_patch)
+    train = shape.kind == "train"
+    profile = profile_override or (arch.train_profile if train else arch.serve_profile)
+    rules = rules_lib.make_rules(profile, mesh)
+    specs_tree = _specs_for(arch.family, cfg)
+    aparams = param_lib.abstract_params(specs_tree, dtype=getattr(cfg, "dtype", None))
+    psh = rules_lib.params_sharding(specs_tree, rules)
+    ocfg = optimizer or adamw.AdamWConfig()
+    n_params = param_lib.param_count(specs_tree)
+
+    def bsh(sds_tree, axes_map):
+        """shardings for a dict of SDS given {key: logical axes tuple}"""
+        return {k: jax.sharding.NamedSharding(
+            mesh, rules.spec_for(v.shape, axes_map[k]))
+            for k, v in sds_tree.items()}
+
+    name = f"{arch_name}/{shape_name}" + ("/smoke" if smoke else "")
+
+    # ----------------------------------------------------- LM family
+    if arch.family == "lm":
+        if train:
+            gb, seq = shape.global_batch, shape.seq_len
+            if smoke:
+                gb, seq = 4, 64
+            batch = {"tokens": SDS((gb, seq), jnp.int32)}
+            baxes = {"tokens": ("batch", "seq")}
+
+            def loss_fn(p, b, step):
+                logits, aux = lm_lib.forward(p, cfg, b["tokens"])
+                loss = lm_lib.lm_loss(logits[:, :-1], b["tokens"][:, 1:])
+                return loss + cfg.aux_loss_coef * aux
+
+            accum = 1 if smoke else pick_accum(
+                gb, seq * cfg.d_model * 2, _dp_size(mesh))
+            step = _train_wrap(loss_fn, ocfg, rules, accum)
+            aopt = adamw.abstract_state(aparams)
+            osh = {"m": psh_f32(psh), "v": psh_f32(psh), "step": _replicated(mesh)}
+            metr = {k: _replicated(mesh) for k in ("loss", "grad_norm", "lr")}
+            active = moe_active_params(cfg, specs_tree) if cfg.moe else n_params
+            return StepBundle(name, step, (aparams, aopt, batch),
+                              (psh, osh, bsh(batch, baxes)), (psh, osh, metr),
+                              (0, 1), transformer_model_flops(active, gb * seq, True),
+                              hlo_scale=accum, notes=f"accum={accum}")
+
+        if shape.kind == "prefill":
+            gb, seq = shape.global_batch, shape.seq_len
+            if smoke:
+                gb, seq = 2, 64
+            batch = {"tokens": SDS((gb, seq), jnp.int32)}
+            baxes = {"tokens": ("batch", "seq")}
+            acache = lm_lib.abstract_cache(cfg, gb, seq, dtype=cfg.cache_dtype)
+            cache_sh = {k: jax.sharding.NamedSharding(
+                mesh, rules.spec_for(v.shape, lm_lib.CACHE_AXES))
+                for k, v in acache.items()}
+            logits_sh = jax.sharding.NamedSharding(
+                mesh, rules.spec_for((gb, 1, cfg.vocab), ("batch", None, "act_vocab")))
+
+            def step(params, batch):
+                with rules_lib.use_rules(rules):
+                    return lm_lib.prefill(params, cfg, batch["tokens"])
+
+            active = moe_active_params(cfg, specs_tree) if cfg.moe else n_params
+            return StepBundle(name, step, (aparams, batch),
+                              (psh, bsh(batch, baxes)), (logits_sh, cache_sh),
+                              (), transformer_model_flops(active, gb * seq, False))
+
+        # decode
+        gb, seq = shape.global_batch, shape.seq_len
+        if smoke:
+            gb, seq = 2, 64
+        batch = {"token": SDS((gb, 1), jnp.int32)}
+        baxes = {"token": ("batch", None)}
+        acache = lm_lib.abstract_cache(cfg, gb, seq, dtype=cfg.cache_dtype)
+        caxes = lm_lib.cache_axes(cfg)
+        cache_sh = jax.tree.map(lambda v: jax.sharding.NamedSharding(
+            mesh, rules.spec_for(v.shape, caxes)), acache)
+        aindex = SDS((), jnp.int32)
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for((gb, 1, cfg.vocab), ("batch", None, "act_vocab")))
+
+        def step(params, batch, cache, index):
+            with rules_lib.use_rules(rules):
+                return lm_lib.decode_step(params, cfg, batch["token"], cache, index)
+
+        active = moe_active_params(cfg, specs_tree) if cfg.moe else n_params
+        return StepBundle(name, step, (aparams, batch, acache, aindex),
+                          (psh, bsh(batch, baxes), cache_sh, _replicated(mesh)),
+                          (logits_sh, cache_sh), (2,),
+                          transformer_model_flops(active, gb, False))
+
+    # ----------------------------------------------------- vision families
+    if arch.family in ("vit", "swin", "resnet"):
+        fwd = {"vit": lambda p, im: vit_lib.forward(p, cfg, im),
+               "swin": lambda p, im: swin_lib.forward(p, cfg, im),
+               "resnet": lambda p, im: resnet_lib.forward(p, cfg, im, train=train),
+               }[arch.family]
+        janus_note = ""
+        if janus_alpha is not None:
+            assert arch.family == "vit" and not train, \
+                "ToMe schedule applies to ViT-family serving"
+            from repro.core import pruning as pruning_lib
+            sched_j = pruning_lib.make_schedule(
+                "exponential", janus_alpha, cfg.n_layers, cfg.num_tokens)
+            fwd = lambda p, im: vit_lib.forward_janus(p, cfg, im, sched_j)
+            janus_note = (f" janus_alpha={janus_alpha} "
+                          f"(merges {sum(sched_j)}/{cfg.num_tokens} tokens)")
+        sh = shape if not smoke else ShapeSpec(shape.name, shape.kind,
+                                               img_res=cfg.img_res, batch=2)
+        batch = _vision_batch(sh, cfg)
+        baxes = {"images": ("batch", None, None, None), "labels": ("batch",)}
+        if arch.family == "resnet":
+            mflops = resnet_fwd_flops(cfg, sh.batch) * (3 if train else 1)
+        elif arch.family == "swin":
+            mflops = swin_fwd_flops(cfg, sh.batch) * (3 if train else 1)
+        else:
+            tokens = sh.batch * (cfg.img_res // cfg.patch) ** 2
+            mflops = transformer_model_flops(n_params, tokens, train)
+
+        if train:
+            def loss_fn(p, b, step):
+                return _ce_loss(fwd(p, b["images"]), b["labels"])
+            if arch.family == "resnet":
+                act_b = (cfg.img_res // 4) ** 2 * cfg.width * 4 * 2
+            else:
+                d = cfg.d_model if arch.family == "vit" else cfg.dims[0]
+                pt = cfg.patch
+                act_b = (cfg.img_res // pt) ** 2 * d * 2
+            accum = 1 if smoke else pick_accum(sh.batch, act_b, _dp_size(mesh))
+            step = _train_wrap(loss_fn, ocfg, rules, accum)
+            aopt = adamw.abstract_state(aparams)
+            osh = {"m": psh_f32(psh), "v": psh_f32(psh), "step": _replicated(mesh)}
+            metr = {k: _replicated(mesh) for k in ("loss", "grad_norm", "lr")}
+            return StepBundle(name, step, (aparams, aopt, batch),
+                              (psh, osh, bsh(batch, baxes)), (psh, osh, metr),
+                              (0, 1), mflops, hlo_scale=accum,
+                              notes=f"accum={accum}")
+
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for((sh.batch, 1000), ("batch", "act_vocab")))
+
+        def step(params, batch):
+            with rules_lib.use_rules(rules):
+                return fwd(params, batch["images"])
+
+        return StepBundle(name, step, (aparams, batch),
+                          (psh, bsh(batch, baxes)), logits_sh, (), mflops,
+                          notes=janus_note)
+
+    # ----------------------------------------------------- diffusion families
+    if arch.family == "dit":
+        bsz = 2 if smoke else shape.batch
+        steps = 2 if smoke else (shape.steps if shape.kind == "gen" else 1)
+        lres = cfg.latent_res
+        if train:
+            batch = {"latents": SDS((bsz, lres, lres, cfg.latent_channels), jnp.float32),
+                     "labels": SDS((bsz,), jnp.int32)}
+            baxes = {"latents": ("batch", None, None, None), "labels": ("batch",)}
+
+            def loss_fn(p, b, step):
+                rng = jax.random.fold_in(jax.random.PRNGKey(0), step)
+                return diffusion.dit_loss(p, cfg, b["latents"], b["labels"], rng)
+
+            step = _train_wrap(loss_fn, ocfg, rules)  # DiT-S is tiny: accum=1
+            aopt = adamw.abstract_state(aparams)
+            osh = {"m": psh_f32(psh), "v": psh_f32(psh), "step": _replicated(mesh)}
+            metr = {k: _replicated(mesh) for k in ("loss", "grad_norm", "lr")}
+            tokens = bsz * cfg.num_tokens
+            return StepBundle(name, step, (aparams, aopt, batch),
+                              (psh, osh, bsh(batch, baxes)), (psh, osh, metr),
+                              (0, 1), transformer_model_flops(n_params, tokens, True))
+
+        batch = {"labels": SDS((bsz,), jnp.int32)}
+        baxes = {"labels": ("batch",)}
+        out_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for((bsz, lres, lres, cfg.latent_channels),
+                                 ("batch", None, None, None)))
+
+        def step(params, batch):
+            with rules_lib.use_rules(rules):
+                return diffusion.dit_sample(params, cfg, jax.random.PRNGKey(0),
+                                            batch["labels"], steps)
+
+        tokens = bsz * cfg.num_tokens * steps
+        return StepBundle(name, step, (aparams, batch),
+                          (psh, bsh(batch, baxes)), out_sh, (),
+                          transformer_model_flops(n_params, tokens, False),
+                          hlo_scale=steps,
+                          notes=f"sampler: {steps} scanned denoise steps")
+
+    if arch.family == "flux":
+        bsz = 2 if smoke else shape.batch
+        steps = 2 if smoke else (shape.steps if shape.kind == "gen" else 1)
+        lres = cfg.latent_res
+        txt = SDS((bsz, cfg.txt_len, cfg.t5_dim), jnp.float32)
+        vec = SDS((bsz, cfg.clip_dim), jnp.float32)
+        if train:
+            batch = {"latents": SDS((bsz, lres, lres, cfg.latent_channels), jnp.float32),
+                     "txt": txt, "vec": vec}
+            baxes = {"latents": ("batch", None, None, None),
+                     "txt": ("batch", None, None), "vec": ("batch", None)}
+
+            def loss_fn(p, b, step):
+                rng = jax.random.fold_in(jax.random.PRNGKey(0), step)
+                return diffusion.flux_loss(p, cfg, b["latents"], b["txt"], b["vec"], rng)
+
+            act_b = (cfg.n_img_tokens + cfg.txt_len) * cfg.d_model * 2
+            accum = 1 if smoke else pick_accum(bsz, act_b, _dp_size(mesh))
+            step = _train_wrap(loss_fn, ocfg, rules, accum)
+            aopt = adamw.abstract_state(aparams)
+            osh = {"m": psh_f32(psh), "v": psh_f32(psh), "step": _replicated(mesh)}
+            metr = {k: _replicated(mesh) for k in ("loss", "grad_norm", "lr")}
+            return StepBundle(name, step, (aparams, aopt, batch),
+                              (psh, osh, bsh(batch, baxes)), (psh, osh, metr),
+                              (0, 1), flux_fwd_flops(cfg, bsz) * 3,
+                              hlo_scale=accum, notes=f"accum={accum}")
+
+        batch = {"txt": txt, "vec": vec}
+        baxes = {"txt": ("batch", None, None), "vec": ("batch", None)}
+        out_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for((bsz, lres, lres, cfg.latent_channels),
+                                 ("batch", None, None, None)))
+
+        def step(params, batch):
+            with rules_lib.use_rules(rules):
+                return diffusion.flux_sample(params, cfg, jax.random.PRNGKey(0),
+                                             batch["txt"], batch["vec"], steps)
+
+        return StepBundle(name, step, (aparams, batch),
+                          (psh, bsh(batch, baxes)), out_sh, (),
+                          flux_fwd_flops(cfg, bsz) * steps,
+                          hlo_scale=steps,
+                          notes=f"sampler: {steps} scanned denoise steps")
+
+    raise ValueError(f"unknown family {arch.family}")
+
+
+class SkipShape(Exception):
+    def __init__(self, arch, shape, reason):
+        super().__init__(f"{arch}/{shape} skipped: {reason}")
+        self.arch, self.shape, self.reason = arch, shape, reason
+
+
+def psh_f32(psh_tree):
+    """Optimizer m/v shardings match the param shardings (same shapes)."""
+    return jax.tree.map(lambda s: s, psh_tree)
+
+
+def input_specs(arch_name: str, shape_name: str, mesh, **kw):
+    """Brief-mandated helper: the abstract (ShapeDtypeStruct) inputs."""
+    return build_bundle(arch_name, shape_name, mesh, **kw).abstract_inputs

@@ -1,0 +1,1 @@
+from repro.models import dit, flux, layers, lm, moe, param, resnet, swin, vit

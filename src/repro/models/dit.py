@@ -1,0 +1,220 @@
+"""DiT (Diffusion Transformer, Peebles & Xie) — assigned arch dit-s2.
+
+Operates on VAE latents (img_res/8 spatial, 4 channels); patch=2 over the
+latent grid. adaLN-Zero conditioning on (timestep, class). Scan over stacked
+blocks.
+
+DiT is a ViT over latent patches, so the Janus token pruner applies directly
+(ToMe-for-SD precedent); ``forward_janus`` mirrors vit.forward_janus with a
+merge schedule — the unmerge/repeat step needed to reconstruct the dense output
+grid tracks merge indices per layer (ToMe-SD style average-unmerge).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tome
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    img_res: int = 256
+    patch: int = 2
+    n_layers: int = 12
+    d_model: int = 384
+    n_heads: int = 6
+    mlp_ratio: int = 4
+    n_classes: int = 1000
+    latent_channels: int = 4
+    vae_factor: int = 8
+    dtype: Any = jnp.float32
+    remat: bool = False
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // self.vae_factor
+
+    @property
+    def grid(self) -> int:
+        return self.latent_res // self.patch
+
+    @property
+    def num_tokens(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+
+def _block_specs(cfg: DiTConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "attn": L.attention_specs(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.head_dim),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff),
+        # adaLN-zero: c -> (shift, scale, gate) x (attn, mlp)
+        "ada": L.linear_specs(cfg.d_model, 6 * cfg.d_model, axes=("embed", "mlp"),
+                              init="zeros"),
+    }
+
+
+def specs(cfg: DiTConfig) -> dict:
+    pdim = cfg.patch * cfg.patch * cfg.latent_channels
+    return {
+        "patch_embed": L.linear_specs(pdim, cfg.d_model, axes=("patch", "embed")),
+        "pos": ParamSpec((1, cfg.num_tokens, cfg.d_model), (None, "pos", "embed"), init="normal"),
+        "t_mlp1": L.linear_specs(256, cfg.d_model, axes=(None, "embed")),
+        "t_mlp2": L.linear_specs(cfg.d_model, cfg.d_model, axes=("embed", "embed")),
+        "y_embed": L.embed_specs(cfg.n_classes + 1, cfg.d_model),  # +1 null class (CFG)
+        "blocks": L.stack_specs(cfg.n_layers, lambda: _block_specs(cfg)),
+        "final_ln": L.layernorm_specs(cfg.d_model),
+        "final_ada": L.linear_specs(cfg.d_model, 2 * cfg.d_model, axes=("embed", "mlp"), init="zeros"),
+        "final_proj": L.linear_specs(cfg.d_model, pdim, axes=("embed", "patch"), init="zeros"),
+    }
+
+
+def patchify(cfg: DiTConfig, latents: jax.Array) -> jax.Array:
+    b, h, w, c = latents.shape
+    p = cfg.patch
+    x = latents.reshape(b, h // p, p, w // p, p, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+def unpatchify(cfg: DiTConfig, x: jax.Array) -> jax.Array:
+    b, n, _ = x.shape
+    g, p, c = cfg.grid, cfg.patch, cfg.latent_channels
+    x = x.reshape(b, g, g, p, p, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * p, g * p, c)
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def conditioning(params: dict, cfg: DiTConfig, t: jax.Array, y: jax.Array) -> jax.Array:
+    temb = L.timestep_embedding(t, 256).astype(cfg.dtype)
+    temb = L.linear(params["t_mlp2"], jax.nn.silu(L.linear(params["t_mlp1"], temb)))
+    return temb + L.embed(params["y_embed"], y).astype(cfg.dtype)
+
+
+def _block(bp: dict, cfg: DiTConfig, x: jax.Array, c: jax.Array,
+           sizes: jax.Array | None = None, merge_r: int = 0, scores_fn=None):
+    ada = L.linear(bp["ada"], jax.nn.silu(c))
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+    bias = None
+    if sizes is not None:
+        bias = jnp.log(sizes.astype(jnp.float32))
+    attn_out, _, metric = L.attention(
+        bp["attn"], _modulate(L.layernorm(bp["ln1"], x), sh1, sc1),
+        n_heads=cfg.n_heads, n_kv=cfg.n_heads, head_dim=cfg.head_dim,
+        bias=bias, return_metric=True)
+    x = x + g1[:, None] * attn_out
+    if merge_r > 0:
+        x, sizes = tome.tome_merge(x, metric, sizes, merge_r,
+                                   protect_first=False, scores_fn=scores_fn)
+    x = x + g2[:, None] * L.mlp(bp["mlp"], _modulate(L.layernorm(bp["ln2"], x), sh2, sc2))
+    return x, sizes
+
+
+def forward(params: dict, cfg: DiTConfig, latents: jax.Array, t: jax.Array,
+            y: jax.Array) -> jax.Array:
+    """Predict noise eps. latents: [B, latent_res, latent_res, C]; t: [B]; y: [B]."""
+    x = L.linear(params["patch_embed"], patchify(cfg, latents).astype(cfg.dtype))
+    x = x + params["pos"].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    c = conditioning(params, cfg, t, y)
+
+    def body(carry, bp):
+        h, _ = _block(bp, cfg, carry, c)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=layer_unroll(cfg.n_layers))
+
+    sh, sc = jnp.split(L.linear(params["final_ada"], jax.nn.silu(c)), 2, axis=-1)
+    x = _modulate(L.layernorm(params["final_ln"], x), sh, sc)
+    return unpatchify(cfg, L.linear(params["final_proj"], x))
+
+
+def forward_janus(params: dict, cfg: DiTConfig, latents: jax.Array, t: jax.Array,
+                  y: jax.Array, schedule: Sequence[int], scores_fn=None) -> jax.Array:
+    """ToMe-merged forward with dense-output reconstruction.
+
+    Uses global average unmerge: merged tokens' outputs are broadcast back via
+    the per-layer merge maps (ToMe-SD style). Output shape equals the dense
+    forward's.
+    """
+    x = L.linear(params["patch_embed"], patchify(cfg, latents).astype(cfg.dtype))
+    x = x + params["pos"].astype(x.dtype)
+    c = conditioning(params, cfg, t, y)
+    sizes = jnp.ones(x.shape[:2], cfg.dtype)
+    maps = []  # per merge: [B, n_before] -> index into n_after
+
+    for l in range(cfg.n_layers):
+        r = int(schedule[l])
+        if r > 0:
+            # do the match explicitly so we can record the unmerge map
+            bias = jnp.log(sizes.astype(jnp.float32))
+            ada = L.linear(layer_params(params, l)["ada"], jax.nn.silu(c))
+            sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+            bp = layer_params(params, l)
+            attn_out, _, metric = L.attention(
+                bp["attn"], _modulate(L.layernorm(bp["ln1"], x), sh1, sc1),
+                n_heads=cfg.n_heads, n_kv=cfg.n_heads, head_dim=cfg.head_dim,
+                bias=bias, return_metric=True)
+            x = x + g1[:, None] * attn_out
+            idx = tome.bipartite_soft_matching(metric, r, protect_first=False,
+                                               scores_fn=scores_fn)
+            maps.append(_unmerge_map(x.shape[1], idx))
+            x, sizes = tome.merge_tokens(x, sizes, idx)
+            x = x + g2[:, None] * L.mlp(bp["mlp"], _modulate(L.layernorm(bp["ln2"], x), sh2, sc2))
+        else:
+            x, sizes = _block(layer_params(params, l), cfg, x, c, sizes, 0)
+
+    sh, sc = jnp.split(L.linear(params["final_ada"], jax.nn.silu(c)), 2, axis=-1)
+    x = _modulate(L.layernorm(params["final_ln"], x), sh, sc)
+    # unmerge back to the full token grid (reverse order)
+    for m in reversed(maps):
+        x = jnp.take_along_axis(x, m[..., None], axis=1)
+    return unpatchify(cfg, L.linear(params["final_proj"], x))
+
+
+def layer_params(params: dict, l: int) -> dict:
+    return jax.tree.map(lambda a: a[l], params["blocks"])
+
+
+def _unmerge_map(n_before: int, idx: tome.MergeIndices) -> jax.Array:
+    """[B, n_before] map: position before merge -> position after merge."""
+    b = idx.src_idx.shape[0]
+    r = idx.src_idx.shape[1]
+    na = (n_before + 1) // 2
+    n_after = n_before - r
+    n_unm = na - r
+
+    def one(src_idx, unm_idx, dst_idx):
+        out = jnp.zeros((n_before,), jnp.int32)
+        a_pos = jnp.arange(0, n_before, 2)
+        b_pos = jnp.arange(1, n_before, 2)
+        # B tokens land at n_unm + their index
+        out = out.at[b_pos].set(n_unm + jnp.arange(b_pos.shape[0], dtype=jnp.int32))
+        # unmerged A tokens land at their rank in unm_idx
+        out = out.at[a_pos[unm_idx]].set(jnp.arange(n_unm, dtype=jnp.int32))
+        # merged A tokens land wherever their dst B token went
+        out = out.at[a_pos[src_idx]].set(n_unm + dst_idx.astype(jnp.int32))
+        return out
+
+    return jax.vmap(one)(idx.src_idx, idx.unm_idx, idx.dst_idx)

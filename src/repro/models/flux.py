@@ -1,0 +1,234 @@
+"""Flux-dev style MMDiT rectified-flow backbone (BFL tech report; unverified).
+
+19 double-stream blocks (separate img/txt streams, joint attention) followed by
+38 single-stream blocks (fused stream), d_model=3072, 24 heads, ~12B params.
+The text frontend (T5/CLIP) is a STUB: ``input_specs`` provides precomputed
+text embeddings [B, txt_len, t5_dim] and a pooled CLIP vector [B, clip_dim].
+
+2-axis RoPE over the latent grid (txt tokens at position 0), modulation from
+(timestep, guidance, pooled vec). Scan over stacked double and single blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class FluxConfig:
+    img_res: int = 1024
+    patch: int = 2
+    latent_channels: int = 16
+    vae_factor: int = 8
+    d_model: int = 3072
+    n_heads: int = 24
+    n_double: int = 19
+    n_single: int = 38
+    mlp_ratio: int = 4
+    txt_len: int = 512
+    t5_dim: int = 4096
+    clip_dim: int = 768
+    dtype: Any = jnp.bfloat16
+    remat: bool = False
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // self.vae_factor
+
+    @property
+    def grid(self) -> int:
+        return self.latent_res // self.patch
+
+    @property
+    def n_img_tokens(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+
+def _mod_specs(cfg: FluxConfig, n: int) -> dict:
+    return L.linear_specs(cfg.d_model, n * cfg.d_model, axes=("embed", "mlp"), init="zeros")
+
+
+def _double_specs(cfg: FluxConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "img_mod": _mod_specs(cfg, 6),
+        "txt_mod": _mod_specs(cfg, 6),
+        "img_attn": L.attention_specs(d, h, h, hd, qk_norm=True),
+        "txt_attn": L.attention_specs(d, h, h, hd, qk_norm=True),
+        "img_mlp": L.mlp_specs(d, cfg.d_ff),
+        "txt_mlp": L.mlp_specs(d, cfg.d_ff),
+    }
+
+
+def _single_specs(cfg: FluxConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "mod": _mod_specs(cfg, 3),
+        # fused qkv + mlp-in in one projection, attn-out + mlp-out in another
+        "wqkv_mlp": L.linear_specs(d, 3 * d + cfg.d_ff, axes=("embed", "heads")),
+        "q_norm": L.rmsnorm_specs(cfg.head_dim, (None,)),
+        "k_norm": L.rmsnorm_specs(cfg.head_dim, (None,)),
+        "w_out": L.linear_specs(d + cfg.d_ff, d, axes=("heads", "embed")),
+    }
+
+
+def specs(cfg: FluxConfig) -> dict:
+    pdim = cfg.patch * cfg.patch * cfg.latent_channels
+    d = cfg.d_model
+    return {
+        "img_in": L.linear_specs(pdim, d, axes=("patch", "embed")),
+        "txt_in": L.linear_specs(cfg.t5_dim, d, axes=("patch", "embed")),
+        "time_in1": L.linear_specs(256, d, axes=(None, "embed")),
+        "time_in2": L.linear_specs(d, d, axes=("embed", "embed")),
+        "guid_in1": L.linear_specs(256, d, axes=(None, "embed")),
+        "guid_in2": L.linear_specs(d, d, axes=("embed", "embed")),
+        "vec_in1": L.linear_specs(cfg.clip_dim, d, axes=(None, "embed")),
+        "vec_in2": L.linear_specs(d, d, axes=("embed", "embed")),
+        "double": L.stack_specs(cfg.n_double, lambda: _double_specs(cfg)),
+        "single": L.stack_specs(cfg.n_single, lambda: _single_specs(cfg)),
+        "final_ln": L.layernorm_specs(d),
+        "final_ada": _mod_specs(cfg, 2),
+        "final_proj": L.linear_specs(d, pdim, axes=("embed", "patch"), init="zeros"),
+    }
+
+
+def _rope_2d(x: jax.Array, pos_hw: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, D]; pos_hw: [B, S, 2] (row, col; txt tokens = 0)."""
+    d_half = x.shape[-1] // 2
+    x_r, x_c = x[..., :d_half], x[..., d_half:]
+    x_r = L.apply_rope(x_r, pos_hw[..., 0], theta)
+    x_c = L.apply_rope(x_c, pos_hw[..., 1], theta)
+    return jnp.concatenate([x_r, x_c], axis=-1)
+
+
+def _mlp_embed(params, name, v, cfg):
+    h = jax.nn.silu(L.linear(params[f"{name}1"], v))
+    return L.linear(params[f"{name}2"], h)
+
+
+def _joint_attention(cfg, q, k, v):
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(cfg.head_dim))
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out.reshape(*out.shape[:2], cfg.d_model)
+
+
+def _qkv(ap, x, cfg, pos):
+    q = L._proj(ap, "q", x, cfg.n_heads, cfg.head_dim)
+    k = L._proj(ap, "k", x, cfg.n_heads, cfg.head_dim)
+    v = L._proj(ap, "v", x, cfg.n_heads, cfg.head_dim)
+    q = L.rmsnorm(ap["q_norm"], q)
+    k = L.rmsnorm(ap["k_norm"], k)
+    q = _rope_2d(q, pos)
+    k = _rope_2d(k, pos)
+    return q, k, v
+
+
+def _double_block(bp, cfg, img, txt, vec, img_pos, txt_pos):
+    im = L.linear(bp["img_mod"], jax.nn.silu(vec))
+    tm = L.linear(bp["txt_mod"], jax.nn.silu(vec))
+    ish1, isc1, ig1, ish2, isc2, ig2 = jnp.split(im, 6, axis=-1)
+    tsh1, tsc1, tg1, tsh2, tsc2, tg2 = jnp.split(tm, 6, axis=-1)
+
+    img_n = L.layernorm_noparam(img) * (1 + isc1[:, None]) + ish1[:, None]
+    txt_n = L.layernorm_noparam(txt) * (1 + tsc1[:, None]) + tsh1[:, None]
+    iq, ik, iv = _qkv(bp["img_attn"], img_n, cfg, img_pos)
+    tq, tk, tv = _qkv(bp["txt_attn"], txt_n, cfg, txt_pos)
+    q = jnp.concatenate([tq, iq], axis=1)
+    k = jnp.concatenate([tk, ik], axis=1)
+    v = jnp.concatenate([tv, iv], axis=1)
+    attn = _joint_attention(cfg, q, k, v)
+    t_attn, i_attn = attn[:, : txt.shape[1]], attn[:, txt.shape[1]:]
+
+    img = img + ig1[:, None] * (L.linear({"w": bp["img_attn"]["wo"], "b": bp["img_attn"]["bo"]}, i_attn))
+    txt = txt + tg1[:, None] * (L.linear({"w": bp["txt_attn"]["wo"], "b": bp["txt_attn"]["bo"]}, t_attn))
+    img_n2 = L.layernorm_noparam(img) * (1 + isc2[:, None]) + ish2[:, None]
+    txt_n2 = L.layernorm_noparam(txt) * (1 + tsc2[:, None]) + tsh2[:, None]
+    img = img + ig2[:, None] * L.mlp(bp["img_mlp"], img_n2)
+    txt = txt + tg2[:, None] * L.mlp(bp["txt_mlp"], txt_n2)
+    return img, txt
+
+
+def _single_block(bp, cfg, x, vec, pos):
+    m = L.linear(bp["mod"], jax.nn.silu(vec))
+    sh, sc, g = jnp.split(m, 3, axis=-1)
+    xn = L.layernorm_noparam(x) * (1 + sc[:, None]) + sh[:, None]
+    proj = L.linear(bp["wqkv_mlp"], xn)
+    qkv, h = proj[..., : 3 * cfg.d_model], proj[..., 3 * cfg.d_model:]
+    b, s, _ = x.shape
+    q, k, v = jnp.split(qkv.reshape(b, s, 3 * cfg.n_heads, cfg.head_dim), 3, axis=2)
+    q = L.rmsnorm(bp["q_norm"], q)
+    k = L.rmsnorm(bp["k_norm"], k)
+    q = _rope_2d(q, pos)
+    k = _rope_2d(k, pos)
+    attn = _joint_attention(cfg, q, k, v)
+    out = L.linear(bp["w_out"], jnp.concatenate([attn, jax.nn.gelu(h)], axis=-1))
+    return x + g[:, None] * out
+
+
+def forward(params: dict, cfg: FluxConfig, latents: jax.Array, txt: jax.Array,
+            vec: jax.Array, t: jax.Array, guidance: jax.Array) -> jax.Array:
+    """Rectified-flow velocity prediction.
+
+    latents: [B, latent_res, latent_res, C]; txt: [B, txt_len, t5_dim];
+    vec: [B, clip_dim]; t, guidance: [B].
+    """
+    b = latents.shape[0]
+    p, g = cfg.patch, cfg.grid
+    x = latents.astype(cfg.dtype).reshape(b, g, p, g, p, cfg.latent_channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, g * g, p * p * cfg.latent_channels)
+    img = L.linear(params["img_in"], x)
+    txt_e = L.linear(params["txt_in"], txt.astype(cfg.dtype))
+    img = constrain(img, ("batch", "seq", "act_embed"))
+    txt_e = constrain(txt_e, ("batch", "seq", "act_embed"))
+
+    vec_c = (_mlp_embed(params, "time_in", L.timestep_embedding(t * 1000.0, 256).astype(cfg.dtype), cfg)
+             + _mlp_embed(params, "guid_in", L.timestep_embedding(guidance * 1000.0, 256).astype(cfg.dtype), cfg)
+             + _mlp_embed(params, "vec_in", vec.astype(cfg.dtype), cfg))
+
+    rows = jnp.repeat(jnp.arange(g), g)
+    cols = jnp.tile(jnp.arange(g), g)
+    img_pos = jnp.broadcast_to(jnp.stack([rows, cols], -1)[None], (b, g * g, 2))
+    txt_pos = jnp.zeros((b, cfg.txt_len, 2), jnp.int32)
+
+    def dbody(carry, bp):
+        i, tx = carry
+        i, tx = _double_block(bp, cfg, i, tx, vec_c, img_pos, txt_pos)
+        return (i, tx), None
+
+    def sbody(carry, bp):
+        return _single_block(bp, cfg, carry, vec_c, all_pos), None
+
+    if cfg.remat:
+        dbody = jax.checkpoint(dbody, prevent_cse=False)
+        sbody = jax.checkpoint(sbody, prevent_cse=False)
+
+    (img, txt_e), _ = jax.lax.scan(dbody, (img, txt_e), params["double"],
+                                   unroll=layer_unroll(cfg.n_double))
+    xcat = jnp.concatenate([txt_e, img], axis=1)
+    all_pos = jnp.concatenate([txt_pos, img_pos], axis=1)
+    xcat, _ = jax.lax.scan(sbody, xcat, params["single"], unroll=layer_unroll(cfg.n_single))
+    img = xcat[:, cfg.txt_len:]
+
+    sh, sc = jnp.split(L.linear(params["final_ada"], jax.nn.silu(vec_c)), 2, axis=-1)
+    img = L.layernorm(params["final_ln"], img) * (1 + sc[:, None]) + sh[:, None]
+    out = L.linear(params["final_proj"], img)
+    out = out.reshape(b, g, g, p, p, cfg.latent_channels).transpose(0, 1, 3, 2, 4, 5)
+    return out.reshape(b, g * p, g * p, cfg.latent_channels)

@@ -1,0 +1,373 @@
+"""Shared pure-JAX building blocks for all model families.
+
+Every ``*_specs`` function returns a nested dict of ParamSpec; every apply
+function takes the materialized sub-tree plus inputs. Norm math accumulates in
+fp32 regardless of activation dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+
+# ---------------------------------------------------------------------------
+# linear / norm
+# ---------------------------------------------------------------------------
+
+
+def linear_specs(d_in: int, d_out: int, *, axes=("embed", "mlp"), bias: bool = True,
+                 init: str = "fan_in", scale: float | None = None) -> dict:
+    p = {"w": ParamSpec((d_in, d_out), axes, init=init, scale=scale)}
+    if bias:
+        p["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = jnp.einsum("...i,io->...o", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def layernorm_specs(d: int, axes=("embed",)) -> dict:
+    return {"scale": ParamSpec((d,), axes, init="ones"),
+            "bias": ParamSpec((d,), axes, init="zeros")}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_noparam(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def rmsnorm_specs(d: int, axes=("embed",)) -> dict:
+    return {"scale": ParamSpec((d,), axes, init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_specs(kind: str, d: int, axes=("embed",)) -> dict:
+    return layernorm_specs(d, axes) if kind == "ln" else rmsnorm_specs(d, axes)
+
+
+def norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return layernorm(p, x) if kind == "ln" else rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA-general; ViT is the n_kv == n_heads special case)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int, *,
+                    bias: bool = True, qk_norm: bool = False,
+                    fused_qkv: bool = False) -> dict:
+    if fused_qkv:
+        assert n_kv == n_heads, "fused qkv is for MHA (ViT-family)"
+        p = {
+            "wqkv": ParamSpec((d_model, 3 * n_heads * head_dim),
+                              ("embed", "heads"), init="fan_in"),
+            "wo": ParamSpec((n_heads * head_dim, d_model), ("heads", "embed"),
+                            init="fan_in"),
+        }
+        if bias:
+            p["bqkv"] = ParamSpec((3 * n_heads * head_dim,), ("heads",), init="zeros")
+            p["bo"] = ParamSpec((d_model,), ("embed",), init="zeros")
+        return p
+    p = {
+        "wq": ParamSpec((d_model, n_heads * head_dim), ("embed", "heads"), init="fan_in"),
+        "wk": ParamSpec((d_model, n_kv * head_dim), ("embed", "kv"), init="fan_in"),
+        "wv": ParamSpec((d_model, n_kv * head_dim), ("embed", "kv"), init="fan_in"),
+        "wo": ParamSpec((n_heads * head_dim, d_model), ("heads", "embed"), init="fan_in"),
+    }
+    if bias:
+        p["bq"] = ParamSpec((n_heads * head_dim,), ("heads",), init="zeros")
+        p["bk"] = ParamSpec((n_kv * head_dim,), ("kv",), init="zeros")
+        p["bv"] = ParamSpec((n_kv * head_dim,), ("kv",), init="zeros")
+        p["bo"] = ParamSpec((d_model,), ("embed",), init="zeros")
+    if qk_norm:
+        p["q_norm"] = rmsnorm_specs(head_dim, (None,))
+        p["k_norm"] = rmsnorm_specs(head_dim, (None,))
+    return p
+
+
+def _proj(p, name, x, n, head_dim):
+    y = jnp.einsum("...d,dh->...h", x, p[f"w{name}"].astype(x.dtype))
+    if f"b{name}" in p:
+        y = y + p[f"b{name}"].astype(y.dtype)
+    return y.reshape(*y.shape[:-1], n, head_dim)
+
+
+def _qkv_proj(p, x, n_heads, n_kv, head_dim):
+    """Single fused matmul when 'wqkv' is present (one HBM pass over x and one
+    weight read instead of three)."""
+    if "wqkv" not in p:
+        return (_proj(p, "q", x, n_heads, head_dim),
+                _proj(p, "k", x, n_kv, head_dim),
+                _proj(p, "v", x, n_kv, head_dim))
+    y = jnp.einsum("...d,dh->...h", x, p["wqkv"].astype(x.dtype))
+    if "bqkv" in p:
+        y = y + p["bqkv"].astype(y.dtype)
+    q, k, v = jnp.split(y, 3, axis=-1)
+    rs = lambda t: t.reshape(*t.shape[:-1], n_heads, head_dim)
+    return rs(q), rs(k), rs(v)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = False,
+         mask: jax.Array | None = None, bias: jax.Array | None = None,
+         q_offset: int | jax.Array = 0) -> jax.Array:
+    """Scaled dot-product attention with GQA.
+
+    q: [B, Sq, Hq, D]; k,v: [B, Sk, Hkv, D]. Hq must be a multiple of Hkv.
+    Softmax in fp32. ``q_offset`` shifts query positions for causal masking
+    (decode: q_offset = cache length). ``bias`` is additive on the key axis
+    ([B, Sk], e.g. ToMe proportional-attention log-size bias).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    if bias is not None:
+        scores = scores + bias[:, None, None, None, :].astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        cmask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(cmask[None, None, None], scores, -1e30)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
+              causal: bool = False, rope: bool = False, rope_theta: float = 10000.0,
+              positions: jax.Array | None = None, mask: jax.Array | None = None,
+              bias: jax.Array | None = None, return_metric: bool = False,
+              kv_cache: tuple[jax.Array, jax.Array] | None = None,
+              cache_index: jax.Array | None = None,
+              chunk_q: int | None = None,
+              cache_quant_scale: float | None = None,
+              return_kv: bool = False):
+    """General attention layer.
+
+    With ``kv_cache=(k_cache, v_cache)`` of shape [B, S_max, n_kv, D] and
+    ``cache_index`` (current length), performs decode/prefill-append and returns
+    (out, (new_k_cache, new_v_cache)). Otherwise returns (out, None).
+
+    ``cache_quant_scale``: int8 KV cache — buffers hold round(x / scale) int8;
+    dequant happens at the attention read (fuses into the matmul on TPU).
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv_proj(p, x, n_heads, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if positions is None:
+        base = 0 if cache_index is None else cache_index
+        positions = base + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    if rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    q_offset = 0
+    kv_valid_len = None
+    if return_kv:
+        # prefill fast path: K/V over the prompt IS the cache — no zeros
+        # buffer, no dynamic-update-slice (§Perf prefill cell)
+        if cache_quant_scale is not None:
+            qk = jnp.clip(jnp.round(k.astype(jnp.float32) / cache_quant_scale),
+                          -127, 127).astype(jnp.int8)
+            qv = jnp.clip(jnp.round(v.astype(jnp.float32) / cache_quant_scale),
+                          -127, 127).astype(jnp.int8)
+            new_cache = (qk, qv)
+        else:
+            new_cache = (k, v)
+    elif kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        idx = cache_index if cache_index is not None else 0
+
+        def q8(t):
+            if cache_quant_scale is None:
+                return t.astype(k_cache.dtype)
+            return jnp.clip(jnp.round(t.astype(jnp.float32) / cache_quant_scale),
+                            -127, 127).astype(jnp.int8)
+
+        def dq8(t):
+            if cache_quant_scale is None:
+                return t.astype(x.dtype)
+            return (t.astype(jnp.float32) * cache_quant_scale).astype(x.dtype)
+
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, q8(k), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, q8(v), idx, axis=1)
+        new_cache = (k_cache, v_cache)
+        kv_valid_len = idx + s
+        k, v = dq8(k_cache), dq8(v_cache)
+        q_offset = idx
+
+    use_chunked = (chunk_q is not None and s > chunk_q and s % chunk_q == 0
+                   and bias is None and mask is None)
+    if use_chunked:
+        out = chunked_sdpa(q, k, v, causal=causal, chunk_q=chunk_q,
+                           q_offset=q_offset, kv_valid_len=kv_valid_len)
+    else:
+        if kv_valid_len is not None:
+            kpos = jnp.arange(k.shape[1])
+            lmask = (kpos < kv_valid_len)[None, None, None, None, :]
+            mask = lmask if mask is None else jnp.logical_and(mask, lmask)
+        out = sdpa(q, k, v, causal=causal, mask=mask, bias=bias, q_offset=q_offset)
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    y = jnp.einsum("...h,hd->...d", out, p["wo"].astype(out.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    if return_metric:
+        return y, new_cache, k.mean(axis=2)  # ToMe metric: mean of keys over kv heads
+    return y, new_cache
+
+
+def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = False,
+                 chunk_q: int = 512, q_offset: int | jax.Array = 0,
+                 kv_valid_len: jax.Array | None = None) -> jax.Array:
+    """Memory-efficient attention: scan over query chunks so the live score
+    buffer is [*, chunk_q, Sk] instead of [*, Sq, Sk]. The XLA-level analogue
+    of the Pallas flash kernel — required for 32k+ sequences where full scores
+    would not fit HBM. GQA layout identical to ``sdpa``.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    nq = sq // chunk_q
+    assert nq * chunk_q == sq, (sq, chunk_q)
+    qg = q.reshape(b, nq, chunk_q, hkv, group, d).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(sk)
+    kv_mask = None
+    if kv_valid_len is not None:
+        kv_mask = kpos < kv_valid_len  # [sk]
+
+    def one_chunk(ci, qc):
+        # qc: [b, chunk_q, hkv, group, d]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, k).astype(jnp.float32)
+        s = s / math.sqrt(d)
+        if causal:
+            qpos = ci * chunk_q + jnp.arange(chunk_q) + q_offset
+            cm = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(cm[None, None, None], s, -1e30)
+        if kv_mask is not None:
+            s = jnp.where(kv_mask[None, None, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+    def body(ci, qc):
+        return ci + 1, jax.checkpoint(one_chunk)(ci, qc)
+
+    _, out = jax.lax.scan(body, jnp.int32(0), qg, unroll=layer_unroll(nq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, *, bias: bool = True) -> dict:
+    return {"fc1": linear_specs(d_model, d_ff, axes=("embed", "mlp"), bias=bias),
+            "fc2": linear_specs(d_ff, d_model, axes=("mlp", "embed"), bias=bias)}
+
+
+def mlp(p: dict, x: jax.Array, act=jax.nn.gelu) -> jax.Array:
+    return linear(p["fc2"], act(linear(p["fc1"], x)))
+
+
+def swiglu_specs(d_model: int, d_ff: int) -> dict:
+    return {"gate": linear_specs(d_model, d_ff, axes=("embed", "mlp"), bias=False),
+            "up": linear_specs(d_model, d_ff, axes=("embed", "mlp"), bias=False),
+            "down": linear_specs(d_ff, d_model, axes=("mlp", "embed"), bias=False)}
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# embeddings & misc
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(vocab: int, d_model: int) -> dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+
+
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10000.0) -> jax.Array:
+    """Sinusoidal timestep embedding, t: [B] float in [0, 1000]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def stack_specs(n: int, make_one):
+    """Stack n copies of a spec tree along a leading 'layers' axis (for scan)."""
+
+    def add_axis(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + spec.shape, ("layers",) + spec.axes,
+                         dtype=spec.dtype, init=spec.init, scale=spec.scale)
+
+    return jax.tree.map(add_axis, make_one(), is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,250 @@
+"""Decoder-only transformer LM family (GQA, RoPE; dense MLP or MoE).
+
+Covers starcoder2-3b (LN+gelu+bias), internlm2-1.8b (RMS+SwiGLU),
+qwen3-moe-30b-a3b (RMS+SwiGLU experts, qk-norm) and granite-moe (RMS+SwiGLU
+experts). Scan-over-layers for compile efficiency at 24-48 layers.
+
+Three entry points:
+  forward      — training forward, returns logits [B, S, V] (+ moe aux loss)
+  prefill      — causal forward that also materializes the KV cache
+  decode_step  — one token with a [L, B, S_max, n_kv, hd] stacked cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    norm: str = "ln"            # "ln" | "rms"
+    act: str = "gelu"           # "gelu" (mlp) | "swiglu"
+    attn_bias: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    moe: moe_lib.MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = False
+    aux_loss_coef: float = 0.01
+    attn_chunk: int | None = 512  # chunked (flash-style) attention threshold
+    cache_quant_scale: float | None = None  # int8 KV cache when set
+    # Constrain the cache to its decode sharding (S on "model") inside every
+    # prefill layer. True forces a full-cache reshard per layer (a
+    # collective-permute storm — §Perf found it costs ~n_layers x); False
+    # writes the cache as produced and reshards ONCE via out_shardings.
+    cache_reshard_per_layer: bool = False
+    # "stacked": [L, B, S, kv, hd] arrays threaded through lax.scan (compact
+    # HLO, but XLA double-buffers the full stack across the loop).
+    # "per_layer": L separate buffers + unrolled decode loop — each layer's
+    # update aliases in place (the production serving layout; §Perf cell A).
+    cache_layout: str = "stacked"
+    # "gspmd": capacity-gather MoE, GSPMD places the EP collectives (it picks
+    # a giant masked all-reduce for the combine — §Perf). "a2a": explicit
+    # shard_map all-to-all dispatch (models/moe_a2a.py), the production path.
+    moe_impl: str = "gspmd"
+
+    @property
+    def cache_dtype(self):
+        return jnp.int8 if self.cache_quant_scale is not None else self.dtype
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+def _block_specs(cfg: LMConfig) -> dict:
+    p = {
+        "norm1": L.norm_specs(cfg.norm, cfg.d_model),
+        "attn": L.attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                  bias=cfg.attn_bias, qk_norm=cfg.qk_norm),
+        "norm2": L.norm_specs(cfg.norm, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.specs(cfg.moe)
+    elif cfg.act == "swiglu":
+        p["ffn"] = L.swiglu_specs(cfg.d_model, cfg.d_ff)
+    else:
+        p["ffn"] = L.mlp_specs(cfg.d_model, cfg.d_ff, bias=cfg.attn_bias)
+    return p
+
+
+def specs(cfg: LMConfig) -> dict:
+    p = {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model),
+        "blocks": L.stack_specs(cfg.n_layers, lambda: _block_specs(cfg)),
+        "norm_f": L.norm_specs(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.linear_specs(cfg.d_model, cfg.vocab, axes=("embed", "vocab"), bias=False)
+    return p
+
+
+def _ffn(bp: dict, cfg: LMConfig, x: jax.Array):
+    if cfg.moe is not None:
+        if cfg.moe_impl == "a2a":
+            from repro.models import moe_a2a
+            from repro.sharding import current_rules
+            rules = current_rules()
+            if rules is not None:
+                return moe_a2a.apply(bp["moe"], cfg.moe, x, rules.mesh)
+            # no mesh context (single-device smoke): gspmd path is equivalent
+        return moe_lib.apply(bp["moe"], cfg.moe, x)
+    if cfg.act == "swiglu":
+        return L.swiglu(bp["ffn"], x), jnp.float32(0.0)
+    return L.mlp(bp["ffn"], x), jnp.float32(0.0)
+
+
+def _block(bp: dict, cfg: LMConfig, x: jax.Array, *, kv_cache=None,
+           cache_index=None, return_kv: bool = False):
+    h = L.norm(cfg.norm, bp["norm1"], x)
+    h = constrain(h, ("batch", "seq", "act_embed"))
+    attn_out, new_cache = L.attention(
+        bp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+        causal=True, rope=True, rope_theta=cfg.rope_theta,
+        kv_cache=kv_cache, cache_index=cache_index, chunk_q=cfg.attn_chunk,
+        cache_quant_scale=cfg.cache_quant_scale, return_kv=return_kv)
+    x = x + attn_out
+    is_decode = x.shape[1] == 1
+    if new_cache is not None and (is_decode or cfg.cache_reshard_per_layer):
+        new_cache = tuple(constrain(c, ("batch", "act_seq_kv", "act_kv", None))
+                          for c in new_cache)
+    ffn_out, aux = _ffn(bp, cfg, L.norm(cfg.norm, bp["norm2"], x))
+    x = x + ffn_out
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, aux
+
+
+def _logits(params: dict, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    x = L.norm(cfg.norm, params["norm_f"], x)
+    if cfg.tie_embeddings:
+        out = L.unembed(params["embed"], x)
+    else:
+        out = L.linear(params["lm_head"], x)
+    return constrain(out, ("batch", "seq", "act_vocab"))
+
+
+def forward(params: dict, cfg: LMConfig, tokens: jax.Array):
+    """tokens: [B, S] int32 -> (logits [B, S, V], aux_loss)."""
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    def body(carry, bp):
+        y, _, aux = _block(bp, cfg, carry)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["blocks"], unroll=layer_unroll(cfg.n_layers))
+    return _logits(params, cfg, x), jnp.sum(auxs)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.cache_layout == "per_layer":
+        shape = (batch, max_len, cfg.n_kv, cfg.hd)
+        return [{"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+                for _ in range(cfg.n_layers)]
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.cache_layout == "per_layer":
+        sds = jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv, cfg.hd), dtype)
+        return [{"k": sds, "v": sds} for _ in range(cfg.n_layers)]
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+CACHE_AXES = ("layers", "batch", "act_seq_kv", "act_kv", None)
+CACHE_AXES_PER_LAYER = ("batch", "act_seq_kv", "act_kv", None)
+
+
+def cache_axes(cfg: LMConfig):
+    return (CACHE_AXES_PER_LAYER if cfg.cache_layout == "per_layer"
+            else CACHE_AXES)
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: jax.Array, max_len: int | None = None):
+    """Causal forward over a prompt; returns (last-position logits, cache).
+
+    Cache buffers are sized ``max_len`` (default: prompt length).
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    # K/V over the prompt IS the cache: collect per-layer (k, v) as scan ys
+    # instead of dynamic-update-slicing a zeros buffer per layer — no zeros
+    # init, no full-buffer DUS, and the decode-layout reshard happens ONCE on
+    # the stacked output (§Perf prefill cell).
+    def body(carry, bp):
+        y, (kc, vc), _ = _block(bp, cfg, carry, return_kv=True)
+        return y, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (k, v) = jax.lax.scan(body, x, params["blocks"],
+                             unroll=layer_unroll(cfg.n_layers))
+    if max_len > s:  # pad to serving headroom once, outside the loop
+        pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"k": k, "v": v}
+
+
+def decode_step(params: dict, cfg: LMConfig, token: jax.Array, cache,
+                index: jax.Array):
+    """One decode step. token: [B, 1] int32; index: scalar current length.
+
+    Returns (logits [B, 1, V], new cache). Cache structure follows
+    cfg.cache_layout (see LMConfig).
+    """
+    x = L.embed(params["embed"], token).astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    if cfg.cache_layout == "per_layer":
+        new_cache = []
+        for l, layer_cache in enumerate(cache):
+            bp = jax.tree.map(lambda a: a[l], params["blocks"])
+            x, (kc, vc), _ = _block(bp, cfg, x,
+                                    kv_cache=(layer_cache["k"], layer_cache["v"]),
+                                    cache_index=index)
+            new_cache.append({"k": kc, "v": vc})
+        return _logits(params, cfg, x), new_cache
+
+    def body(carry, bp_and_cache):
+        bp, kc, vc = bp_and_cache
+        y, (kc, vc), _ = _block(bp, cfg, carry, kv_cache=(kc, vc), cache_index=index)
+        return y, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]),
+                             unroll=layer_unroll(cfg.n_layers))
+    return _logits(params, cfg, x), {"k": k, "v": v}
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Next-token cross entropy; logits [B, S, V], labels [B, S] (already shifted)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

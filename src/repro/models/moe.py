@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer with group-wise capacity routing (gather-based).
+
+Design notes (TPU adaptation):
+* Tokens are processed in fixed-size *groups* along the sequence so that all
+  dispatch bookkeeping is static-shape and group-local (GShard-style capacity,
+  but the dispatch itself is gather/scatter rather than the classic one-hot
+  einsum — the einsum dispatch costs O(T·E·C·D) MXU FLOPs which would dominate
+  the expert FFN at our scales; gathers are memory-bound and nearly free by
+  comparison).
+* Expert weights are sharded on the "experts" logical axis (EP profile maps it
+  to the "model" mesh axis); the dispatch gather forces an all-to-all style
+  resharding from token-sharded to expert-sharded, which is exactly the MoE a2a.
+* Experts that don't divide the mesh axis can be zero-padded via
+  ``n_experts_padded`` (e.g. granite's 40 -> 48 on a 16-way axis).
+
+Routing: softmax router, top-k, position-in-expert computed by a stable sort
+over expert ids per group (no [T, E] one-hot cumsum), drop beyond capacity.
+A dense (all-experts) reference used by unit tests lives in ``dense_reference``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 256          # tokens per routing group
+    n_experts_padded: int | None = None  # zero-pad experts to this for even EP
+    router_dtype: Any = jnp.float32
+
+    @property
+    def e_pad(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+    def capacity(self, group_size: int | None = None) -> int:
+        sg = group_size or self.group_size
+        c = math.ceil(sg * self.top_k * self.capacity_factor / self.n_experts)
+        return max(c, 1)
+
+
+def specs(cfg: MoEConfig) -> dict:
+    e = cfg.e_pad
+    return {
+        "router": ParamSpec((cfg.d_model, cfg.n_experts), ("embed", None), init="fan_in"),
+        "w_gate": ParamSpec((e, cfg.d_model, cfg.d_ff), ("experts", "embed", "mlp"), init="fan_in"),
+        "w_up": ParamSpec((e, cfg.d_model, cfg.d_ff), ("experts", "embed", "mlp"), init="fan_in"),
+        "w_down": ParamSpec((e, cfg.d_ff, cfg.d_model), ("experts", "mlp", "embed"), init="fan_in"),
+    }
+
+
+def route(cfg: MoEConfig, logits: jax.Array):
+    """logits: [G, S, E_real] -> (gates [G,S,K], experts [G,S,K])."""
+    probs = jax.nn.softmax(logits.astype(cfg.router_dtype), axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / (gates.sum(axis=-1, keepdims=True) + 1e-9)
+    return gates, experts
+
+
+def _positions_in_expert(experts_flat: jax.Array, n_experts: int) -> jax.Array:
+    """experts_flat: [M] expert ids -> [M] rank of each slot within its expert.
+
+    Stable sort keeps earlier slots at lower rank (position-priority dropping).
+    """
+    m = experts_flat.shape[0]
+    order = jnp.argsort(experts_flat, stable=True)
+    sorted_e = jnp.take(experts_flat, order)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[experts_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(m, dtype=jnp.int32) - jnp.take(starts, sorted_e)
+    pos = jnp.zeros((m,), jnp.int32).at[order].set(pos_sorted)
+    return pos
+
+
+def apply(params: dict, cfg: MoEConfig, x: jax.Array):
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Tokens are grouped by ``group_size`` (falling back to one group of all
+    tokens when it doesn't divide, e.g. tiny decode batches).
+    """
+    b, s, d = x.shape
+    t = b * s
+    sg = cfg.group_size if t % cfg.group_size == 0 else t
+    g = t // sg
+    k, e, c = cfg.top_k, cfg.e_pad, cfg.capacity(sg)
+
+    xg = x.reshape(g, sg, d)
+    xg = constrain(xg, ("batch", None, "act_embed"))
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"].astype(xg.dtype))
+    gates, experts = route(cfg, logits)  # [g, sg, k]
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits.astype(cfg.router_dtype), axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(experts[..., 0], cfg.n_experts,
+                                   dtype=cfg.router_dtype), axis=(0, 1))
+    aux_loss = cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # --- per-group dispatch bookkeeping (vmapped over groups) ---
+    def _group_dispatch(e_slots):
+        # e_slots: [sg*k] expert ids in slot order (token-major, k-minor)
+        pos = _positions_in_expert(e_slots, e)  # [sg*k]
+        kept = pos < c
+        dest = jnp.where(kept, e_slots * c + pos, e * c)  # sentinel = e*c
+        # slot index for each (expert, capacity) cell; sentinel row discarded
+        slot_of_cell = jnp.full((e * c + 1,), sg * k, jnp.int32).at[dest].set(
+            jnp.arange(sg * k, dtype=jnp.int32), mode="drop")
+        return pos, kept, dest, slot_of_cell[: e * c]
+
+    e_slots = experts.reshape(g, sg * k).astype(jnp.int32)
+    pos, kept, dest, slot_of_cell = jax.vmap(_group_dispatch)(e_slots)
+
+    # --- gather expert inputs: [g, e, c, d] ---
+    token_of_cell = jnp.minimum(slot_of_cell // k, sg - 1)  # sentinel-safe
+    cell_valid = (slot_of_cell < sg * k)[..., None]
+    x_exp = jnp.take_along_axis(xg, token_of_cell[..., None], axis=1)
+    x_exp = jnp.where(cell_valid, x_exp, 0).reshape(g, e, c, d)
+    x_exp = constrain(x_exp, ("batch", "act_experts", None, "act_embed"))
+
+    # --- expert FFN (SwiGLU), batched over experts ---
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_exp, params["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", x_exp, params["w_up"].astype(x.dtype))
+    y_exp = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    y_exp = constrain(y_exp, ("batch", "act_experts", None, "act_embed"))
+
+    # --- combine: gather each slot's output, weight by gate, sum over k ---
+    y_flat = y_exp.reshape(g, e * c, d)
+    safe_dest = jnp.minimum(dest, e * c - 1)
+    y_slots = jnp.take_along_axis(y_flat, safe_dest[..., None], axis=1)  # [g, sg*k, d]
+    y_slots = jnp.where(kept[..., None], y_slots, 0)
+    y_slots = y_slots.reshape(g, sg, k, d)
+    y = jnp.einsum("gskd,gsk->gsd", y_slots, gates.astype(x.dtype))
+    y = constrain(y, ("batch", None, "act_embed"))
+    return y.reshape(b, s, d), aux_loss
+
+
+def dense_reference(params: dict, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Exact no-capacity reference: every token through its top-k experts."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    gates, experts = route(cfg, logits)  # [b, s, k]
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, params["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,edf->bsef", x, params["w_up"].astype(x.dtype))
+    y_all = jnp.einsum("bsef,efd->bsed", h, params["w_down"].astype(x.dtype))  # [b,s,e,d]
+    onehot = jax.nn.one_hot(experts, cfg.e_pad, dtype=x.dtype)  # [b,s,k,e]
+    w = jnp.einsum("bske,bsk->bse", onehot, gates.astype(x.dtype))
+    return jnp.einsum("bsed,bse->bsd", y_all, w)

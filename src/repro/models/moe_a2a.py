@@ -1,0 +1,140 @@
+"""Expert-parallel MoE with EXPLICIT all-to-all dispatch (shard_map).
+
+§Perf finding: under pure GSPMD, the combine-gather across expert-sharded
+buffers lowers to a full [tokens, slots, d] masked ALL-REDUCE (~4.3 GB fp32
+per layer for qwen3 prefill) — the classic reason real MoE systems do their
+own dispatch. This module is that production pattern:
+
+  per model-shard (inside shard_map over the whole mesh):
+    1. take this shard's slice of the local tokens, route top-k;
+    2. first-level capacity dispatch BY DESTINATION SHARD -> [tp, cap, d]
+       send buffer; lax.all_to_all exchanges it (wire: cap x d, bf16);
+    3. second-level local dispatch into per-local-expert capacity buffers,
+       batched SwiGLU over the shard's e_loc experts;
+    4. scatter back -> reverse all_to_all -> combine with the locally-kept
+       gates; all_gather the token slices back across the shard axis.
+
+Wire per device per layer ~ 4 x cap x d (two a2a round trips) + token
+all-gather, instead of the GSPMD path's slots x d all-reduce.
+
+Numerics match moe.dense_reference up to capacity drops (tests/test_moe_a2a).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+from repro.models.moe import MoEConfig, _positions_in_expert
+
+
+def _local_moe(cfg: MoEConfig, tp: int, dp_axes, x, router, w_gate, w_up, w_down):
+    """Per-device body. x: [t_rep, d] (tokens replicated across 'model');
+    expert weights: local shards [e_loc, d, f]."""
+    t_rep, d = x.shape
+    e_loc = w_gate.shape[0]
+    k = cfg.top_k
+    shard = jax.lax.axis_index("model")
+    t_loc = t_rep // tp
+    x_my = jax.lax.dynamic_slice_in_dim(x, shard * t_loc, t_loc, axis=0)
+
+    # ---- route my token slice
+    logits = (x_my @ router.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)            # [t_loc, k]
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    experts = experts.astype(jnp.int32)
+
+    # ---- level 1: dispatch by destination shard
+    slots = t_loc * k
+    dest = (experts // e_loc).reshape(slots)            # [slots]
+    cap = max(1, math.ceil(slots * cfg.capacity_factor / tp))
+    pos = _positions_in_expert(dest, tp)                # rank within dest shard
+    keep = pos < cap
+    cell = jnp.where(keep, dest * cap + pos, tp * cap)  # sentinel = tp*cap
+    token_of_slot = jnp.arange(slots, dtype=jnp.int32) // k
+    send_x = jnp.zeros((tp * cap + 1, d), x.dtype).at[cell].set(
+        jnp.take(x_my, token_of_slot, axis=0), mode="drop")[:-1]
+    e_local_of_slot = (experts % e_loc).reshape(slots)
+    send_eid = jnp.full((tp * cap + 1,), e_loc, jnp.int32).at[cell].set(
+        e_local_of_slot, mode="drop")[:-1]              # e_loc = invalid marker
+
+    recv_x = jax.lax.all_to_all(send_x.reshape(tp, cap, d), "model",
+                                split_axis=0, concat_axis=0, tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid.reshape(tp, cap), "model",
+                                  split_axis=0, concat_axis=0, tiled=False)
+    recv_x = recv_x.reshape(tp * cap, d)
+    recv_eid = recv_eid.reshape(tp * cap)
+
+    # ---- level 2: local dispatch into per-expert capacity buffers
+    n_recv = tp * cap
+    c2 = max(1, math.ceil(n_recv * cfg.capacity_factor / max(e_loc, 1)))
+    pos2 = _positions_in_expert(recv_eid, e_loc + 1)    # +1 bin for invalid
+    valid2 = jnp.logical_and(recv_eid < e_loc, pos2 < c2)
+    cell2 = jnp.where(valid2, recv_eid * c2 + pos2, e_loc * c2)
+    x_exp = jnp.zeros((e_loc * c2 + 1, d), x.dtype).at[cell2].set(
+        recv_x, mode="drop")[:-1].reshape(e_loc, c2, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_exp, w_gate.astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", x_exp, w_up.astype(x.dtype))
+    y_exp = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+
+    # ---- scatter back to wire slots, reverse a2a
+    y_wire = jnp.take(y_exp.reshape(e_loc * c2, d),
+                      jnp.minimum(cell2, e_loc * c2 - 1), axis=0)
+    y_wire = jnp.where(valid2[:, None], y_wire, 0)
+    y_back = jax.lax.all_to_all(y_wire.reshape(tp, cap, d), "model",
+                                split_axis=0, concat_axis=0, tiled=False)
+    y_back = y_back.reshape(tp * cap, d)
+
+    # ---- combine at source with locally-kept gates
+    y_slot = jnp.take(y_back, jnp.minimum(cell, tp * cap - 1), axis=0)
+    y_slot = jnp.where(keep[:, None], y_slot, 0).reshape(t_loc, k, d)
+    y_my = jnp.einsum("tkd,tk->td", y_slot, gates.astype(x.dtype))
+
+    # ---- reassemble the replicated token block across shards
+    y = jax.lax.all_gather(y_my, "model", axis=0, tiled=True)  # [t_rep, d]
+
+    # aux loss: average the per-shard estimate over every mesh axis so the
+    # out_specs P() replication claim holds
+    frac = jnp.mean(jax.nn.one_hot(experts[..., 0], cfg.n_experts,
+                                   dtype=jnp.float32), axis=0)
+    aux = cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    aux = jax.lax.pmean(aux, ("model",) + tuple(dp_axes))
+    return y, aux
+
+
+def apply(params: dict, cfg: MoEConfig, x: jax.Array, mesh,
+          model_axis: str = "model"):
+    """x: [B, S, D] -> ([B, S, D], aux). Runs the a2a dispatch under
+    shard_map on ``mesh``; tokens must be divisible by dp*tp."""
+    from jax.experimental.shard_map import shard_map
+
+    b, s, d = x.shape
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    tp = mesh.shape[model_axis]
+    t = b * s
+    if t % (dp * tp) != 0:  # tiny decode batches: gspmd path handles them
+        return moe_lib.apply(params, cfg, x)
+    xf = x.reshape(t, d)
+
+    body = partial(_local_moe, cfg, tp, dp_axes)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_axes if dp_axes else None, None),  # tokens over data
+                  P(None, None),                           # router replicated
+                  P(model_axis, None, None),               # experts sharded
+                  P(model_axis, None, None),
+                  P(model_axis, None, None)),
+        out_specs=(P(dp_axes if dp_axes else None, None), P()),
+        check_rep=False)
+    y, aux = fn(xf, params["router"],
+                params["w_gate"], params["w_up"], params["w_down"])
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,107 @@
+"""Declarative parameter specs with logical sharding axes.
+
+One source of truth per model: a nested dict of ``ParamSpec`` leaves. From it we
+derive (a) materialized params, (b) ``jax.ShapeDtypeStruct`` abstract params for
+the dry-run (no allocation), and (c) the logical-axis tree consumed by
+``repro.sharding.rules`` to build ``PartitionSpec``s.
+
+Logical axis vocabulary (shared across models):
+  embed      d_model
+  mlp        feed-forward hidden
+  heads      flattened q heads*head_dim (or head axis)
+  kv         flattened kv heads*head_dim
+  vocab      vocabulary / classes
+  experts    MoE expert axis
+  layers     stacked-scan layer axis (never sharded)
+  conv_in / conv_out / kh / kw   convolution dims
+  patch      flattened patch pixels
+  pos        positional-table length
+  stack      generic stacked axis (never sharded)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis name (str) or None per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | fan_in | embed
+    scale: float | None = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        scale = spec.scale if spec.scale is not None else 0.02
+        return (scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = int(np.prod(spec.shape[:-1])) if len(spec.shape) > 1 else spec.shape[0]
+        scale = spec.scale if spec.scale is not None else 1.0
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return (scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(specs, key: jax.Array, dtype=None):
+    """Materialize a spec tree into arrays. ``dtype`` overrides float leaves."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        arr = _init_leaf(spec, k)
+        if dtype is not None and jnp.issubdtype(arr.dtype, jnp.floating):
+            arr = arr.astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=None):
+    """ShapeDtypeStruct tree — used by the dry-run, no allocation."""
+
+    def leaf(spec: ParamSpec):
+        dt = spec.dtype
+        if dtype is not None and jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            dt = dtype
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+
+    return jax.tree.map(leaf, specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, same structure as the param tree."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def param_bytes(specs, dtype=None) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec):
+        dt = dtype if (dtype is not None and jnp.issubdtype(jnp.dtype(s.dtype), jnp.floating)) else s.dtype
+        total += int(np.prod(s.shape)) * jnp.dtype(dt).itemsize
+    return total

@@ -1,0 +1,142 @@
+"""ResNet (bottleneck) — assigned arch resnet-152 (depths 3-8-36-3, width 64).
+
+NHWC, ``lax.conv_general_dilated``; BatchNorm keeps (scale, bias, mean, var)
+params — training mode normalizes with batch statistics (EMA update of running
+stats is handled by the training loop via ``batch_stats`` outputs; the smoke
+path simply uses batch stats), eval mode uses stored stats.
+
+Per stage, the first (strided, projecting) block is separate and the remaining
+identical blocks are stacked + scanned — keeps HLO size modest for the 36-deep
+stage 3.
+
+Token pruning is inapplicable (no tokens); Janus model *splitting* applies at
+stage boundaries where down-sampling shrinks activations (the paper's own CNN
+motivating case) — see core/splitter.py for the CNN split-point adapter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    depths: tuple[int, ...] = (3, 8, 36, 3)
+    width: int = 64
+    n_classes: int = 1000
+    in_channels: int = 3
+    img_res: int = 224
+    dtype: Any = jnp.float32
+    expansion: int = 4
+
+
+def conv_specs(kh, kw, cin, cout) -> dict:
+    return {"w": ParamSpec((kh, kw, cin, cout), ("kh", "kw", "conv_in", "conv_out"),
+                           init="fan_in", scale=1.4142)}
+
+
+def conv(p: dict, x: jax.Array, stride: int = 1, padding="SAME") -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def bn_specs(c: int) -> dict:
+    return {"scale": ParamSpec((c,), ("conv_out",), init="ones"),
+            "bias": ParamSpec((c,), ("conv_out",), init="zeros"),
+            "mean": ParamSpec((c,), ("conv_out",), init="zeros"),
+            "var": ParamSpec((c,), ("conv_out",), init="ones")}
+
+
+def bn(p: dict, x: jax.Array, train: bool, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if train:
+        mu = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+    else:
+        mu, var = p["mean"].astype(jnp.float32), p["var"].astype(jnp.float32)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _bottleneck_specs(cin: int, cmid: int, cout: int, project: bool) -> dict:
+    p = {
+        "conv1": conv_specs(1, 1, cin, cmid), "bn1": bn_specs(cmid),
+        "conv2": conv_specs(3, 3, cmid, cmid), "bn2": bn_specs(cmid),
+        "conv3": conv_specs(1, 1, cmid, cout), "bn3": bn_specs(cout),
+    }
+    if project:
+        p["proj"] = conv_specs(1, 1, cin, cout)
+        p["bn_proj"] = bn_specs(cout)
+    return p
+
+
+def _bottleneck(bp: dict, x: jax.Array, stride: int, train: bool) -> jax.Array:
+    h = jax.nn.relu(bn(bp["bn1"], conv(bp["conv1"], x), train))
+    h = jax.nn.relu(bn(bp["bn2"], conv(bp["conv2"], h, stride=stride), train))
+    h = bn(bp["bn3"], conv(bp["conv3"], h), train)
+    if "proj" in bp:
+        x = bn(bp["bn_proj"], conv(bp["proj"], x, stride=stride), train)
+    return jax.nn.relu(x + h)
+
+
+def specs(cfg: ResNetConfig) -> dict:
+    p: dict = {
+        "stem": conv_specs(7, 7, cfg.in_channels, cfg.width),
+        "bn_stem": bn_specs(cfg.width),
+    }
+    cin = cfg.width
+    for i, depth in enumerate(cfg.depths):
+        cmid = cfg.width * (2 ** i)
+        cout = cmid * cfg.expansion
+        p[f"stage{i}_first"] = _bottleneck_specs(cin, cmid, cout, project=True)
+        if depth > 1:
+            p[f"stage{i}_rest"] = L.stack_specs(
+                depth - 1, lambda cm=cmid, co=cout: _bottleneck_specs(co, cm, co, project=False))
+        cin = cout
+    p["head"] = L.linear_specs(cin, cfg.n_classes, axes=("embed", "vocab"))
+    return p
+
+
+def forward(params: dict, cfg: ResNetConfig, images: jax.Array, train: bool = False) -> jax.Array:
+    x = images.astype(cfg.dtype)
+    x = jax.nn.relu(bn(params["bn_stem"], conv(params["stem"], x, stride=2), train))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    for i, depth in enumerate(cfg.depths):
+        stride = 1 if i == 0 else 2
+        x = _bottleneck(params[f"stage{i}_first"], x, stride, train)
+        x = constrain(x, ("batch", "act_spatial", None, "act_conv_out"))
+        if depth > 1:
+            def body(carry, bp):
+                return _bottleneck(bp, carry, 1, train), None
+            x, _ = jax.lax.scan(body, x, params[f"stage{i}_rest"], unroll=layer_unroll(depth - 1))
+    x = jnp.mean(x, axis=(1, 2))
+    return L.linear(params["head"], x)
+
+
+def stage_features(params: dict, cfg: ResNetConfig, images: jax.Array,
+                   train: bool = False) -> list[jax.Array]:
+    """Per-stage outputs — used by the Janus CNN splitter to size transfers."""
+    feats = []
+    x = images.astype(cfg.dtype)
+    x = jax.nn.relu(bn(params["bn_stem"], conv(params["stem"], x, stride=2), train))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    feats.append(x)
+    for i, depth in enumerate(cfg.depths):
+        stride = 1 if i == 0 else 2
+        x = _bottleneck(params[f"stage{i}_first"], x, stride, train)
+        if depth > 1:
+            def body(carry, bp):
+                return _bottleneck(bp, carry, 1, train), None
+            x, _ = jax.lax.scan(body, x, params[f"stage{i}_rest"], unroll=layer_unroll(depth - 1))
+        feats.append(x)
+    return feats

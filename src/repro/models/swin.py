@@ -1,0 +1,177 @@
+"""Swin Transformer — assigned arch swin-b (window 7, depths 2-2-18-2).
+
+Window attention with relative position bias; shifted windows via jnp.roll with
+a statically precomputed cross-window mask; patch-merging between stages halves
+the spatial grid and doubles channels — note: this *built-in* token reduction
+is exactly the CNN-like property Janus's splitter exploits (DESIGN.md
+§Arch-applicability): splitting applies at stage boundaries, ToMe pruning does
+not (windows must stay dense grids).
+
+Blocks within a stage come in (regular, shifted) pairs; we stack the pairs and
+scan over them for the 18-deep stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.runtime.flags import layer_unroll
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class SwinConfig:
+    img_res: int = 224
+    patch: int = 4
+    window: int = 7
+    depths: tuple[int, ...] = (2, 2, 18, 2)
+    dims: tuple[int, ...] = (128, 256, 512, 1024)
+    heads: tuple[int, ...] = (4, 8, 16, 32)
+    mlp_ratio: int = 4
+    n_classes: int = 1000
+    in_channels: int = 3
+    dtype: Any = jnp.float32
+
+
+def _rel_pos_index(ws: int) -> np.ndarray:
+    """[ws*ws, ws*ws] indices into the (2ws-1)^2 relative-bias table."""
+    coords = np.stack(np.meshgrid(np.arange(ws), np.arange(ws), indexing="ij"))
+    flat = coords.reshape(2, -1)
+    rel = flat[:, :, None] - flat[:, None, :]  # [2, n, n]
+    rel = rel.transpose(1, 2, 0) + (ws - 1)
+    return (rel[..., 0] * (2 * ws - 1) + rel[..., 1]).astype(np.int32)
+
+
+def _shift_mask(h: int, w: int, ws: int, shift: int) -> np.ndarray:
+    """[nW, ws*ws, ws*ws] boolean mask (True = attend) for shifted windows."""
+    img = np.zeros((h, w), np.int32)
+    cnt = 0
+    for hs in (slice(0, -ws), slice(-ws, -shift), slice(-shift, None)):
+        for wsl in (slice(0, -ws), slice(-ws, -shift), slice(-shift, None)):
+            img[hs, wsl] = cnt
+            cnt += 1
+    win = img.reshape(h // ws, ws, w // ws, ws).transpose(0, 2, 1, 3).reshape(-1, ws * ws)
+    return (win[:, :, None] == win[:, None, :])
+
+
+def _window_partition(x: jax.Array, ws: int) -> jax.Array:
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // ws, ws, w // ws, ws, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b * (h // ws) * (w // ws), ws * ws, c)
+
+
+def _window_reverse(x: jax.Array, ws: int, b: int, h: int, w: int) -> jax.Array:
+    c = x.shape[-1]
+    x = x.reshape(b, h // ws, w // ws, ws, ws, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, w, c)
+
+
+def _block_specs(dim: int, heads: int, ws: int, mlp_ratio: int) -> dict:
+    return {
+        "ln1": L.layernorm_specs(dim),
+        "attn": L.attention_specs(dim, heads, heads, dim // heads, bias=True),
+        "rel_bias": ParamSpec(((2 * ws - 1) ** 2, heads), (None, "heads"), init="normal"),
+        "ln2": L.layernorm_specs(dim),
+        "mlp": L.mlp_specs(dim, dim * mlp_ratio),
+    }
+
+
+def specs(cfg: SwinConfig) -> dict:
+    pdim = cfg.patch * cfg.patch * cfg.in_channels
+    p: dict = {
+        "patch_embed": L.linear_specs(pdim, cfg.dims[0], axes=("patch", "embed")),
+        "ln_embed": L.layernorm_specs(cfg.dims[0]),
+    }
+    for i, depth in enumerate(cfg.depths):
+        assert depth % 2 == 0, "swin stages alternate regular/shifted pairs"
+        p[f"stage{i}"] = L.stack_specs(
+            depth // 2,
+            lambda d=cfg.dims[i], h=cfg.heads[i]: {
+                "reg": _block_specs(d, h, cfg.window, cfg.mlp_ratio),
+                "shift": _block_specs(d, h, cfg.window, cfg.mlp_ratio),
+            })
+        if i < len(cfg.depths) - 1:
+            p[f"merge{i}"] = {
+                "ln": L.layernorm_specs(4 * cfg.dims[i]),
+                "proj": L.linear_specs(4 * cfg.dims[i], cfg.dims[i + 1],
+                                       axes=("embed", "mlp"), bias=False),
+            }
+    p["norm"] = L.layernorm_specs(cfg.dims[-1])
+    p["head"] = L.linear_specs(cfg.dims[-1], cfg.n_classes, axes=("embed", "vocab"))
+    return p
+
+
+def _win_attention(bp: dict, cfg: SwinConfig, x: jax.Array, heads: int,
+                   shift: bool, hw: int, mask_const: jax.Array | None):
+    b = x.shape[0]
+    ws = cfg.window
+    rel_idx = jnp.asarray(_rel_pos_index(ws))
+    rel_bias = jnp.take(bp["rel_bias"], rel_idx.reshape(-1), axis=0)
+    rel_bias = rel_bias.reshape(ws * ws, ws * ws, heads).transpose(2, 0, 1)  # [H, n, n]
+
+    sh = ws // 2
+    h = L.layernorm(bp["ln1"], x)
+    if shift:
+        h = jnp.roll(h, (-sh, -sh), axis=(1, 2))
+    win = _window_partition(h, ws)  # [B*nW, n, C]
+    dim = win.shape[-1]
+    hd = dim // heads
+    q = L._proj(bp["attn"], "q", win, heads, hd)
+    k = L._proj(bp["attn"], "k", win, heads, hd)
+    v = L._proj(bp["attn"], "v", win, heads, hd)
+    scores = jnp.einsum("wqhd,wkhd->whqk", q, k).astype(jnp.float32) / np.sqrt(hd)
+    scores = scores + rel_bias[None].astype(jnp.float32)
+    if shift and mask_const is not None:
+        nw = mask_const.shape[0]
+        m = jnp.tile(mask_const, (b, 1, 1))[:, None]  # [B*nW, 1, n, n]
+        scores = jnp.where(m, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("whqk,wkhd->wqhd", w, v).reshape(win.shape[0], ws * ws, dim)
+    out = jnp.einsum("wnh,hd->wnd", out, bp["attn"]["wo"]) + bp["attn"]["bo"].astype(x.dtype)
+    out = _window_reverse(out, ws, b, hw, hw)
+    if shift:
+        out = jnp.roll(out, (sh, sh), axis=(1, 2))
+    return out
+
+
+def _block(bp: dict, cfg: SwinConfig, x: jax.Array, heads: int, shift: bool,
+           hw: int, mask_const):
+    x = x + _win_attention(bp, cfg, x, heads, shift, hw, mask_const)
+    x = x + L.mlp(bp["mlp"], L.layernorm(bp["ln2"], x))
+    return x
+
+
+def forward(params: dict, cfg: SwinConfig, images: jax.Array) -> jax.Array:
+    b = images.shape[0]
+    p = cfg.patch
+    hw = cfg.img_res // p
+    x = images.astype(cfg.dtype).reshape(b, hw, p, hw, p, cfg.in_channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, hw, hw, p * p * cfg.in_channels)
+    x = L.layernorm(params["ln_embed"], L.linear(params["patch_embed"], x))
+
+    for i, depth in enumerate(cfg.depths):
+        heads = cfg.heads[i]
+        mask = jnp.asarray(_shift_mask(hw, hw, cfg.window, cfg.window // 2))
+
+        def body(carry, bp, heads=heads, hw=hw, mask=mask):
+            y = _block(bp["reg"], cfg, carry, heads, False, hw, None)
+            y = _block(bp["shift"], cfg, y, heads, True, hw, mask)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, params[f"stage{i}"], unroll=layer_unroll(depth // 2))
+        x = constrain(x, ("batch", None, None, "act_embed"))
+        if i < len(cfg.depths) - 1:
+            # patch merging: 2x2 neighborhoods -> 4C -> proj to next dim
+            x = x.reshape(b, hw // 2, 2, hw // 2, 2, cfg.dims[i])
+            x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, hw // 2, hw // 2, 4 * cfg.dims[i])
+            x = L.linear(params[f"merge{i}"]["proj"], L.layernorm(params[f"merge{i}"]["ln"], x))
+            hw //= 2
+    x = L.layernorm(params["norm"], x)
+    x = jnp.mean(x, axis=(1, 2))
+    return L.linear(params["head"], x)

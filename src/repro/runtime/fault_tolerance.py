@@ -1,0 +1,100 @@
+"""Fault tolerance for 1000+-node deployments (brief: large-scale runnability).
+
+Three cooperating mechanisms:
+
+* HeartbeatMonitor — workers report per-step heartbeats; hosts that miss
+  ``timeout_steps`` consecutive beats are declared failed. (In a real fleet the
+  transport is the coordination service; here it is in-process state so the
+  policy logic is fully testable.)
+* StragglerDetector — per-step worker durations; a worker slower than
+  ``factor`` x the rolling median for ``patience`` consecutive steps is flagged.
+  Policy hooks: reassign its data shard (the data pipeline re-keys on the
+  worker set) or drop to the elastic path.
+* ElasticPlan — given the surviving device count, propose the largest
+  (data, model) mesh <= survivors that preserves the model-parallel extent
+  (TP degree must divide into surviving hosts' devices; DP shrinks). Restart =
+  make_mesh(new shape) + Checkpointer.restore with the new shardings — restore
+  elasticity is exercised by tests/test_checkpoint.py.
+
+Janus-specific failover: a *network* partition between tiers is handled by the
+dynamic scheduler itself (bandwidth -> 0 drives the split to device-only);
+these classes handle *worker* failures inside a tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Sequence
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: Sequence[str], timeout_steps: int = 3):
+        self.workers = list(workers)
+        self.timeout = timeout_steps
+        self.last_beat: dict[str, int] = {w: 0 for w in self.workers}
+        self.step = 0
+
+    def beat(self, worker: str, step: int | None = None):
+        self.last_beat[worker] = step if step is not None else self.step
+
+    def tick(self) -> list[str]:
+        """Advance one step; return newly-failed workers."""
+        self.step += 1
+        return [w for w in self.workers
+                if self.step - self.last_beat[w] >= self.timeout]
+
+    def alive(self) -> list[str]:
+        return [w for w in self.workers
+                if self.step - self.last_beat[w] < self.timeout]
+
+
+class StragglerDetector:
+    def __init__(self, factor: float = 1.5, patience: int = 3, window: int = 16):
+        self.factor = factor
+        self.patience = patience
+        self.durations: dict[str, deque] = defaultdict(lambda: deque(maxlen=window))
+        self.strikes: dict[str, int] = defaultdict(int)
+
+    def observe(self, step_durations: dict[str, float]) -> list[str]:
+        """Record one step's per-worker durations; return flagged stragglers."""
+        med = float(np.median(list(step_durations.values())))
+        flagged = []
+        for w, d in step_durations.items():
+            self.durations[w].append(d)
+            if d > self.factor * med:
+                self.strikes[w] += 1
+            else:
+                self.strikes[w] = 0
+            if self.strikes[w] >= self.patience:
+                flagged.append(w)
+        return flagged
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+def plan_elastic_mesh(surviving_devices: int, model_parallel: int,
+                      min_data: int = 1) -> ElasticPlan:
+    """Largest (data, model) grid fitting the survivors, preserving TP degree.
+
+    TP degree is preserved because resharding model-parallel state across a
+    *different* TP extent changes per-op shapes (recompile + reshard); shrinking
+    DP only requires re-batching, which the data pipeline handles.
+    """
+    if surviving_devices < model_parallel * min_data:
+        raise ValueError(
+            f"{surviving_devices} devices cannot sustain model_parallel="
+            f"{model_parallel} (need >= {model_parallel * min_data})")
+    data = surviving_devices // model_parallel
+    # power-of-two DP keeps batch splitting simple
+    data = 1 << (data.bit_length() - 1)
+    return ElasticPlan(data=data, model=model_parallel)

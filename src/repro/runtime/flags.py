@@ -1,0 +1,34 @@
+"""Runtime flags threaded through tracing via contextvars.
+
+``unrolled_costs``: the dry-run lowers layer-stack scans fully unrolled so
+``compiled.cost_analysis()`` sees every layer's FLOPs (XLA's HLO cost analysis
+visits a while-loop body exactly once — a scanned 30-layer stack would be
+under-counted 30x). Executions (smoke tests, train driver) keep rolled scans
+for compile speed. Sampler loops (50 denoise steps) and microbatch
+accumulation loops stay rolled even in the dry-run and are accounted by the
+bundle's ``hlo_scale`` instead (every iteration is identical).
+"""
+from __future__ import annotations
+
+import contextvars
+
+_unrolled = contextvars.ContextVar("unrolled_costs", default=False)
+
+
+class unrolled_costs:
+    """Context manager: fully unroll layer scans for cost-exact lowering."""
+
+    def __init__(self, on: bool = True):
+        self.on = on
+
+    def __enter__(self):
+        self._tok = _unrolled.set(self.on)
+        return self
+
+    def __exit__(self, *exc):
+        _unrolled.reset(self._tok)
+
+
+def layer_unroll(n_layers: int) -> int:
+    """`unroll=` argument for layer-stack scans."""
+    return n_layers if _unrolled.get() else 1

@@ -1,0 +1,53 @@
+"""Structural HLO profiler (brief §Perf hints: 'your profile is
+lowered.as_text() + cost_analysis()').
+
+Aggregates operand+result bytes per op kind from compiled HLO text and lists
+the heaviest individual instructions — the hypothesis generator for the
+hillclimb loop: redundant gathers, full-buffer dynamic-update-slices, fp32
+upcasts and layout copies all show up here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.runtime.roofline import _SHAPE_RE, _shape_bytes
+
+_OP_RE = re.compile(r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{} ]*?\s*([a-z][a-z0-9-]*)\(")
+
+
+def op_bytes(line: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line))
+
+
+def profile_text(hlo: str, top: int = 20):
+    by_kind: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    heavy: list[tuple[int, str]] = []
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line or not line.startswith("%") and not line.startswith("ROOT"):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        b = op_bytes(line)
+        by_kind[kind] += b
+        count[kind] += 1
+        heavy.append((b, line[:160]))
+    heavy.sort(key=lambda x: -x[0])
+    return dict(sorted(by_kind.items(), key=lambda kv: -kv[1])), dict(count), heavy[:top]
+
+
+def report(compiled, top: int = 15) -> str:
+    by_kind, counts, heavy = profile_text(compiled.as_text(), top)
+    lines = ["bytes by op kind:"]
+    for k, v in list(by_kind.items())[:15]:
+        lines.append(f"  {k:28s} {v/1e9:9.3f} GB  x{counts[k]}")
+    lines.append("heaviest instructions:")
+    for b, l in heavy:
+        lines.append(f"  {b/1e9:8.3f} GB  {l}")
+    return "\n".join(lines)

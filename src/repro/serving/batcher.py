@@ -1,0 +1,113 @@
+"""Serving-tier request batching + KV-slot management.
+
+* ``KVSlotManager`` — fixed-capacity decode slots (the cache's batch dim);
+  allocate on admission, free on completion. Static shapes: the decode step is
+  compiled once for the full slot count; empty slots run padding tokens.
+* ``ContinuousBatcher`` — vLLM-style continuous batching: new requests join the
+  running batch at any decode step (no stop-the-world refill). For the Janus
+  ViT tier, ``MicroBatcher`` groups frame requests within a deadline window so
+  the engine amortizes per-invocation overhead without violating the SLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    prompt_len: int = 0
+    max_new: int = 16
+    generated: int = 0
+    slot: int | None = None
+    done_s: float | None = None
+
+
+class KVSlotManager:
+    def __init__(self, n_slots: int):
+        self.free = list(range(n_slots))
+        heapq.heapify(self.free)
+        self.n_slots = n_slots
+
+    def alloc(self) -> int | None:
+        return heapq.heappop(self.free) if self.free else None
+
+    def release(self, slot: int):
+        heapq.heappush(self.free, slot)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_slots - len(self.free)
+
+
+class ContinuousBatcher:
+    """Drives decode steps over a request stream; slots refill every step."""
+
+    def __init__(self, n_slots: int, step_time_fn: Callable[[int], float]):
+        self.slots = KVSlotManager(n_slots)
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.step_time_fn = step_time_fn  # active_count -> seconds
+        self.now = 0.0
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.queue[0].arrival_s <= self.now:
+            slot = self.slots.alloc()
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            req.slot = slot
+            self.active[slot] = req
+
+    def step(self):
+        """One decode step across all active slots."""
+        self._admit()
+        self.now += self.step_time_fn(max(len(self.active), 1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.generated += 1
+            if req.generated >= req.max_new:
+                req.done_s = self.now
+                finished.append(slot)
+        for slot in finished:
+            self.completed.append(self.active.pop(slot))
+            self.slots.release(slot)
+
+    def run(self, until_empty: bool = True, max_steps: int = 100000):
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+
+class MicroBatcher:
+    """Deadline-aware frame batching for the Janus ViT tier: hold frames up to
+    ``max_wait_s`` or ``max_batch``, whichever first."""
+
+    def __init__(self, max_batch: int, max_wait_s: float):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.pending: list[Request] = []
+
+    def offer(self, req: Request, now: float) -> list[Request] | None:
+        self.pending.append(req)
+        if len(self.pending) >= self.max_batch:
+            out, self.pending = self.pending, []
+            return out
+        if self.pending and now - self.pending[0].arrival_s >= self.max_wait_s:
+            out, self.pending = self.pending, []
+            return out
+        return None
+
+    def flush(self) -> list[Request]:
+        out, self.pending = self.pending, []
+        return out

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (Rules, constrain, current_rules, params_sharding,
+                                  PROFILES)

@@ -1,0 +1,171 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style).
+
+Models annotate parameters (via ParamSpec.axes) and activations (via
+``constrain(x, ("batch", "seq", "embed"))``) with *logical* axis names only.
+A ``Rules`` object — built from a profile name + mesh — maps logical names to
+mesh axes and produces ``PartitionSpec``/``NamedSharding`` trees.
+
+Divisibility fallback: if a dim size is not divisible by the product of mapped
+mesh-axis sizes, that dim's sharding is dropped (replicated) and recorded in
+``Rules.fallbacks`` — "don't shard what doesn't divide" keeps every config
+lowerable; the roofline table makes the cost of any fallback visible.
+
+Profiles:
+  tp       TP on "model" for hidden/head/vocab/expert dims; DP on batch.
+  fsdp_tp  tp + weights' embed/vocab dims sharded over "data" (ZeRO-3).
+  ep_tp    tp + experts on "model" (expert parallelism); attention TP.
+  dp       pure data parallel (params replicated).
+"""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import ParamSpec, is_spec
+
+# Mesh axes are ("pod", "data", "model") or ("data", "model"); "pod" folds into
+# data-parallelism whenever present.
+BATCH_AXES = ("pod", "data")
+
+_BASE = {
+    # weight dims
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "experts": None,
+    "patch": None,
+    "pos": None,
+    "layers": None,
+    "stack": None,
+    "conv_in": None,
+    "conv_out": "model",
+    "kh": None,
+    "kw": None,
+    # activation dims
+    "batch": BATCH_AXES,
+    "seq": None,
+    "act_seq_kv": "model",  # KV-cache sequence dim: flash-decoding style split-S
+    "act_vocab": "model",   # logits vocab dim (vocab-TP cross entropy)
+    "act_spatial": None,    # conv activation height (spatial partitioning)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_mlp": "model",
+    "act_experts": None,
+    "act_conv_out": "model",
+}
+
+PROFILES: dict[str, dict[str, Any]] = {
+    "dp": {**{k: None for k in _BASE}, "batch": BATCH_AXES},
+    "tp": dict(_BASE),
+    "fsdp_tp": {**_BASE, "embed": "data", "vocab": ("model",), "experts": None},
+    "ep_tp": {**_BASE, "experts": "model", "act_experts": "model",
+              "mlp": None, "act_mlp": None},
+    "fsdp_ep_tp": {**_BASE, "embed": "data", "experts": "model",
+                   "act_experts": "model", "mlp": None, "act_mlp": None},
+    # spatial partitioning for convs: activations split along H on "model"
+    # (GSPMD inserts halo exchanges), weights replicated — kills the per-conv
+    # channel-contraction all-reduces of channel-TP.
+    "spatial": {**{k: None for k in _BASE}, "batch": BATCH_AXES,
+                "act_spatial": "model"},
+    # §Perf MoE experiments: EP weights without forced expert-sharded
+    # activations (let GSPMD place the reshard)...
+    "ep_tp_noact": {**_BASE, "experts": "model", "act_experts": None,
+                    "mlp": None, "act_mlp": None},
+    # ...and per-expert-hidden TP instead of EP (weights [e, d, f/16]; the
+    # combine stays token-local, the contraction AR lands post-combine).
+    "moe_mlp_tp": {**_BASE, "experts": None, "act_experts": None},
+}
+
+
+@dataclasses.dataclass
+class Rules:
+    mapping: dict[str, Any]
+    mesh: Mesh
+
+    def __post_init__(self):
+        self.fallbacks: list[tuple[Any, Any, str]] = []
+
+    def _mesh_axes(self, logical: Any) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        m = self.mapping.get(logical, None)
+        if m is None:
+            return ()
+        if isinstance(m, str):
+            m = (m,)
+        return tuple(a for a in m if a in self.mesh.shape)
+
+    def spec_for(self, shape: tuple[int, ...], axes: tuple[Any, ...]) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        dims = []
+        for size, logical in zip(shape, axes):
+            mesh_axes = tuple(a for a in self._mesh_axes(logical) if a not in used)
+            if mesh_axes:
+                total = int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+                if size % total != 0:
+                    self.fallbacks.append((logical, mesh_axes, f"{size} % {total} != 0"))
+                    mesh_axes = ()
+            used.update(mesh_axes)
+            if not mesh_axes:
+                dims.append(None)
+            elif len(mesh_axes) == 1:
+                dims.append(mesh_axes[0])
+            else:
+                dims.append(mesh_axes)
+        return P(*dims)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+    def constrain(self, x: jax.Array, axes: tuple[Any, ...]) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec_for(x.shape, axes)))
+
+
+_active: contextvars.ContextVar[Rules | None] = contextvars.ContextVar(
+    "active_sharding_rules", default=None)
+
+
+class use_rules:
+    def __init__(self, rules: Rules | None):
+        self.rules = rules
+
+    def __enter__(self):
+        self._token = _active.set(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _active.reset(self._token)
+
+
+def current_rules() -> Rules | None:
+    return _active.get()
+
+
+def constrain(x: jax.Array, axes: tuple[Any, ...]) -> jax.Array:
+    """Annotate activation sharding; identity when no rules are active."""
+    r = current_rules()
+    if r is None:
+        return x
+    return r.constrain(x, axes)
+
+
+def params_sharding(specs_tree, rules: Rules):
+    """NamedSharding tree matching a ParamSpec tree."""
+    return jax.tree.map(lambda s: rules.sharding_for(s.shape, s.axes),
+                        specs_tree, is_leaf=is_spec)
+
+
+def make_rules(profile: str, mesh: Mesh) -> Rules:
+    if profile not in PROFILES:
+        raise KeyError(f"unknown sharding profile {profile!r}; have {list(PROFILES)}")
+    return Rules(dict(PROFILES[profile]), mesh)

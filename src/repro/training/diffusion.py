@@ -1,0 +1,89 @@
+"""Diffusion training losses + samplers (DiT: noise-prediction DDPM-style
+objective; Flux: rectified flow), with scan-based samplers whose step counts
+come from the shape specs (a 50-step sampler is 50 forwards — the Janus ToMe
+schedule applies inside each forward).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dit as dit_lib
+from repro.models import flux as flux_lib
+
+
+# --- DiT: simple eps-prediction objective -----------------------------------
+
+def dit_loss(params, cfg, latents, y, rng):
+    b = latents.shape[0]
+    k1, k2 = jax.random.split(rng)
+    t = jax.random.uniform(k1, (b,)) * 999.0
+    eps = jax.random.normal(k2, latents.shape, latents.dtype)
+    # cosine-ish signal/noise mix (simplified continuous-time DDPM)
+    a = jnp.cos(0.5 * jnp.pi * t / 1000.0)[:, None, None, None]
+    s = jnp.sin(0.5 * jnp.pi * t / 1000.0)[:, None, None, None]
+    x_t = a * latents + s * eps
+    pred = dit_lib.forward(params, cfg, x_t, t, y)
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - eps.astype(jnp.float32)))
+
+
+def dit_sample(params, cfg, rng, y, steps: int, schedule=None):
+    """DDIM-style deterministic sampler; ``schedule`` enables Janus ToMe."""
+    b = y.shape[0]
+    x = jax.random.normal(rng, (b, cfg.latent_res, cfg.latent_res,
+                                cfg.latent_channels), cfg.dtype)
+    ts = jnp.linspace(999.0, 0.0, steps + 1)
+
+    def body(x, i):
+        t0, t1 = ts[i], ts[i + 1]
+        tv = jnp.full((b,), t0)
+        if schedule is not None:
+            eps = dit_lib.forward_janus(params, cfg, x, tv, y, schedule)
+        else:
+            eps = dit_lib.forward(params, cfg, x, tv, y)
+        a0 = jnp.cos(0.5 * jnp.pi * t0 / 1000.0)
+        s0 = jnp.sin(0.5 * jnp.pi * t0 / 1000.0)
+        a1 = jnp.cos(0.5 * jnp.pi * t1 / 1000.0)
+        s1 = jnp.sin(0.5 * jnp.pi * t1 / 1000.0)
+        x0 = (x - s0 * eps) / jnp.maximum(a0, 1e-4)
+        return (a1 * x0 + s1 * eps).astype(x.dtype), None
+
+    if schedule is not None:  # static shapes differ per layer: python loop
+        for i in range(steps):
+            x, _ = body(x, i)
+        return x
+    x, _ = jax.lax.scan(body, x, jnp.arange(steps))
+    return x
+
+
+# --- Flux: rectified flow ----------------------------------------------------
+
+def flux_loss(params, cfg, latents, txt, vec, rng):
+    b = latents.shape[0]
+    k1, k2 = jax.random.split(rng)
+    # logit-normal t (BFL recipe)
+    t = jax.nn.sigmoid(jax.random.normal(k1, (b,)))
+    noise = jax.random.normal(k2, latents.shape, latents.dtype)
+    tb = t[:, None, None, None].astype(latents.dtype)
+    x_t = (1 - tb) * latents + tb * noise
+    target = noise - latents  # dx_t/dt
+    guidance = jnp.full((b,), 3.5)
+    v = flux_lib.forward(params, cfg, x_t, txt, vec, t, guidance)
+    return jnp.mean(jnp.square(v.astype(jnp.float32) - target.astype(jnp.float32)))
+
+
+def flux_sample(params, cfg, rng, txt, vec, steps: int, guidance_scale: float = 3.5):
+    """Euler rectified-flow sampler t: 1 -> 0 over ``steps``."""
+    b = txt.shape[0]
+    x = jax.random.normal(rng, (b, cfg.latent_res, cfg.latent_res,
+                                cfg.latent_channels), cfg.dtype)
+    ts = jnp.linspace(1.0, 0.0, steps + 1)
+    guidance = jnp.full((b,), guidance_scale)
+
+    def body(x, i):
+        t0, t1 = ts[i], ts[i + 1]
+        v = flux_lib.forward(params, cfg, x, txt, vec, jnp.full((b,), t0), guidance)
+        return (x + (t1 - t0) * v).astype(x.dtype), None
+
+    x, _ = jax.lax.scan(body, x, jnp.arange(steps))
+    return x

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run is the ONLY place the
+# 512-device flag is set, per the brief). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,83 @@
+"""Profiler calibration against the paper's published measurements, and the
+Fig.5 linearity observation."""
+import numpy as np
+import pytest
+
+from repro.core import profiler, pruning
+
+
+VITL384 = dict(d=1024, dff=4096, x0=577, n=24)
+
+
+def _stack_latency(platform, tokens_per_layer):
+    return sum(platform.layer_latency(t, VITL384["d"], VITL384["dff"])
+               for t in tokens_per_layer)
+
+
+def test_table1_no_pruning_calibration():
+    """Table I: edge 653.3 ms, cloud 32.3 ms for ViT-L@384 without pruning."""
+    edge = _stack_latency(profiler.EDGE_PLATFORM, [VITL384["x0"]] * VITL384["n"])
+    cloud = _stack_latency(profiler.CLOUD_PLATFORM, [VITL384["x0"]] * VITL384["n"])
+    assert edge * 1e3 == pytest.approx(653.3, rel=0.03)
+    assert cloud * 1e3 == pytest.approx(32.3, rel=0.03)
+
+
+def test_table1_exponential_beats_linear_both_platforms():
+    """Table I ordering: exponential < linear < none, on edge AND cloud."""
+    n, x0 = VITL384["n"], VITL384["x0"]
+    amax = pruning.alpha_max(n, x0)
+    exp = pruning.make_schedule("exponential", amax, n, x0)
+    cum = pruning.cumulative(exp)
+    lin_alpha = cum / sum(n - l for l in range(1, n + 1))
+    lin = pruning.make_schedule("linear", lin_alpha, n, x0)
+    for plat in (profiler.EDGE_PLATFORM, profiler.CLOUD_PLATFORM):
+        t_none = _stack_latency(plat, [x0] * n)
+        t_lin = _stack_latency(plat, pruning.token_counts(x0, lin)[:-1])
+        t_exp = _stack_latency(plat, pruning.token_counts(x0, exp)[:-1])
+        assert t_exp < t_lin < t_none
+
+
+def test_fig5_linearity():
+    """Fig. 5: per-layer latency is strongly linear in token count (r > 0.85)
+    on both platforms — even though the underlying cost model has a quadratic
+    attention term."""
+    grid = range(32, 578, 32)
+    for plat in (profiler.EDGE_PLATFORM, profiler.CLOUD_PLATFORM):
+        prof = profiler.profile_platform(plat, VITL384["d"], VITL384["dff"], grid)
+        assert prof.r > 0.85, f"{plat.name}: r={prof.r}"
+        assert prof.a > 0
+
+
+def test_fig2_cloud_vitb_latency():
+    """Fig. 2(b): ViT-B@224 on the cloud GPU ~ 3.9 ms."""
+    t = sum(profiler.CLOUD_PLATFORM.layer_latency(197, 768, 3072)
+            for _ in range(12))
+    assert t * 1e3 == pytest.approx(3.9, rel=0.25)
+
+
+def test_measured_profiler_linear_fit():
+    """fit_linear on real (jitted CPU) timings still yields a usable model."""
+    import jax, jax.numpy as jnp
+    from repro.models import layers as L, param as param_lib
+
+    d, dff, heads = 64, 128, 4
+    spec = {"ln1": L.layernorm_specs(d),
+            "attn": L.attention_specs(d, heads, heads, d // heads),
+            "ln2": L.layernorm_specs(d), "mlp": L.mlp_specs(d, dff)}
+    params = param_lib.init_params(spec, jax.random.key(0))
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnums=1)
+    def block(p, tokens):
+        x = jnp.ones((1, tokens, d))
+        out, _ = L.attention(p["attn"], L.layernorm(p["ln1"], x),
+                             n_heads=heads, n_kv=heads, head_dim=d // heads)
+        x = x + out
+        return x + L.mlp(p["mlp"], L.layernorm(p["ln2"], x))
+
+    def run(tokens):
+        block(params, tokens).block_until_ready()
+
+    prof = profiler.profile_measured(run, [32, 64, 96, 128], repeats=2)
+    assert prof.a >= 0 and np.isfinite(prof.b)

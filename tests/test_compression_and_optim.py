@@ -1,0 +1,110 @@
+"""LZW/quantization transport + gradient compression + AdamW behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+from repro.optim import adamw, grad_compression as gc
+
+
+# ------------------------------------------------------------- LZW transport
+
+@given(st.binary(min_size=0, max_size=2000))
+@settings(max_examples=30, deadline=None)
+def test_lzw_roundtrip(data):
+    assert compression.lzw_decompress(compression.lzw_compress(data)) == data
+
+
+def test_lzw_compresses_redundant_data():
+    data = b"janus" * 400
+    assert compression.lzw_compress(data).nbytes < len(data) / 3
+
+
+def test_payload_quantization_error_bound():
+    x = np.random.default_rng(0).normal(size=(16, 64)).astype(np.float32)
+    p = compression.activation_payload(x, quantize=True)
+    xd = compression.decode_activation(p)
+    assert np.abs(x - xd).max() <= np.abs(x).max() / 127.0 + 1e-6
+
+
+def test_payload_raw_fallback_never_expands():
+    x = np.random.default_rng(1).normal(size=(64, 64)).astype(np.float32)
+    p = compression.activation_payload(x, quantize=True)
+    assert p.nbytes <= x.size  # int8 raw at worst
+
+
+def test_payload_float_mode_lossless():
+    x = np.random.default_rng(2).normal(size=(8, 8)).astype(np.float32)
+    p = compression.activation_payload(x, quantize=False)
+    np.testing.assert_array_equal(compression.decode_activation(p), x)
+
+
+# ------------------------------------------------------- gradient compression
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    sparse, mask = gc.topk_sparsify(g, 0.5)
+    np.testing.assert_array_equal(np.asarray(mask), [False, True, False, True])
+
+
+def test_error_feedback_preserves_sum_over_time():
+    """EF top-k: after T steps, sum of transmitted grads ~ sum of true grads
+    (residual bounded), the core DGC property."""
+    rng = np.random.default_rng(3)
+    true_sum = np.zeros(64, np.float32)
+    sent_sum = np.zeros(64, np.float32)
+    err = {"g": jnp.zeros(64, jnp.float32)}
+    for _ in range(50):
+        g = rng.normal(size=64).astype(np.float32)
+        true_sum += g
+        comp, err_tree = gc.ef_step({"g": jnp.asarray(g)}, err, keep_ratio=0.25)
+        err = err_tree
+        sent_sum += np.asarray(comp["g"])
+    resid = np.abs(true_sum - sent_sum).max()
+    assert resid <= float(jnp.abs(err["g"]).max()) + 1e-4
+
+
+def test_int8_roundtrip_error():
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(32, 32)), jnp.float32)
+    q, s = gc.int8_compress(x)
+    xd = gc.int8_decompress(q, s)
+    assert float(jnp.abs(x - xd).max()) <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+
+# ----------------------------------------------------------------- AdamW
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=300, grad_clip=0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw.init_state(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(300):
+        grads = jax.tree.map(lambda p: 2 * (p - target), params)
+        params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_adamw_grad_clip_and_lr_schedule():
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(adamw.lr_at(cfg, jnp.int32(0))) == 0.0
+    assert float(adamw.lr_at(cfg, jnp.int32(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(adamw.lr_at(cfg, jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+    params = {"x": jnp.ones(4)}
+    state = adamw.init_state(params)
+    big = {"x": jnp.full(4, 1e6)}
+    _, state, metrics = adamw.apply_updates(cfg, params, big, state)
+    assert float(metrics["grad_norm"]) > 1e5  # norm reported pre-clip
+
+
+def test_adamw_bf16_params_fp32_moments():
+    cfg = adamw.AdamWConfig()
+    params = {"x": jnp.ones(4, jnp.bfloat16)}
+    state = adamw.init_state(params)
+    assert state["m"]["x"].dtype == jnp.float32
+    new_p, state, _ = adamw.apply_updates(cfg, params,
+                                          {"x": jnp.ones(4, jnp.bfloat16)}, state)
+    assert new_p["x"].dtype == jnp.bfloat16

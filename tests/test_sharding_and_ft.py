@@ -1,0 +1,134 @@
+"""Sharding rules (divisibility fallback, profiles) + fault-tolerance policies
++ serving batcher."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamSpec
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, StragglerDetector,
+                                           plan_elastic_mesh)
+from repro.serving.batcher import ContinuousBatcher, KVSlotManager, MicroBatcher, Request
+from repro.sharding import rules as R
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real device, but mesh axis sizes are what the rules check
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Rules only consult .shape; lets us test 16x16 logic without devices."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_tp_profile_spec_mapping():
+    r = R.Rules(dict(R.PROFILES["tp"]), FakeMesh(data=16, model=16))
+    assert r.spec_for((1024, 4096), ("embed", "mlp")) == P(None, "model")
+    assert r.spec_for((256, 128, 128), ("batch", None, None)) == P("data", None, None)
+
+
+def test_divisibility_fallback():
+    r = R.Rules(dict(R.PROFILES["tp"]), FakeMesh(data=16, model=16))
+    # 49155 % 16 != 0 -> vocab sharding dropped, recorded
+    assert r.spec_for((1536, 49155), ("embed", "vocab")) == P(None, None)
+    assert r.fallbacks, "fallback must be recorded"
+
+
+def test_axis_used_once():
+    r = R.Rules(dict(R.PROFILES["ep_tp"]), FakeMesh(data=16, model=16))
+    # experts and act_kv both map to model; second one must drop
+    spec = r.spec_for((128, 512, 128), ("experts", None, "act_kv"))
+    assert spec == P("model", None, None)
+
+
+def test_multi_pod_batch_axes():
+    r = R.Rules(dict(R.PROFILES["tp"]), FakeMesh(pod=2, data=16, model=16))
+    assert r.spec_for((256, 4096), ("batch", "seq")) == P(("pod", "data"), None)
+    # batch=4 indivisible by 32 -> replicated
+    assert r.spec_for((4, 4096), ("batch", "seq")) == P(None, None)
+
+
+def test_params_sharding_tree(mesh):
+    specs = {"w": ParamSpec((64, 128), ("embed", "mlp"))}
+    r = R.make_rules("tp", mesh)
+    sh = R.params_sharding(specs, r)
+    assert sh["w"].spec == P(None, "model")
+
+
+def test_constrain_noop_without_rules():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert R.constrain(x, ("batch", None)) is x
+
+
+# ------------------------------------------------------------ fault tolerance
+
+def test_heartbeat_detects_failure():
+    hb = HeartbeatMonitor(["w0", "w1", "w2"], timeout_steps=2)
+    for step in range(3):
+        hb.beat("w0", step + 1)
+        hb.beat("w1", step + 1)
+        failed = hb.tick()  # w2 never beats
+    assert failed == ["w2"]
+    assert set(hb.alive()) == {"w0", "w1"}
+
+
+def test_straggler_detection_needs_patience():
+    sd = StragglerDetector(factor=1.5, patience=3)
+    flagged = []
+    for _ in range(3):
+        flagged = sd.observe({"w0": 1.0, "w1": 1.0, "w2": 1.0, "w3": 2.5})
+    assert flagged == ["w3"]
+    # recovery resets strikes
+    sd.observe({"w0": 1.0, "w1": 1.0, "w2": 1.0, "w3": 1.0})
+    assert sd.strikes["w3"] == 0
+
+
+def test_elastic_plan_preserves_tp():
+    plan = plan_elastic_mesh(200, model_parallel=16)
+    assert plan.model == 16 and plan.data == 8  # 12 -> pow2 floor 8
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16)
+
+
+# ------------------------------------------------------------ serving batcher
+
+def test_kv_slots():
+    mgr = KVSlotManager(2)
+    a, b = mgr.alloc(), mgr.alloc()
+    assert mgr.alloc() is None
+    mgr.release(a)
+    assert mgr.alloc() == a
+
+
+def test_continuous_batching_joins_mid_flight():
+    # 1 decode step costs 1s regardless of batch -> batching helps throughput
+    cb = ContinuousBatcher(n_slots=2, step_time_fn=lambda n: 1.0)
+    cb.submit(Request(0, arrival_s=0.0, max_new=4))
+    cb.submit(Request(1, arrival_s=1.5, max_new=2))  # joins while 0 runs
+    done = cb.run()
+    by_id = {r.rid: r for r in done}
+    assert by_id[0].done_s == 4.0
+    assert by_id[1].done_s == 4.0  # admitted at t=2, 2 tokens -> done at 4
+    assert len(done) == 2
+
+
+def test_continuous_batching_queue_overflow_waits():
+    cb = ContinuousBatcher(n_slots=1, step_time_fn=lambda n: 1.0)
+    for i in range(3):
+        cb.submit(Request(i, arrival_s=0.0, max_new=2))
+    done = cb.run()
+    assert max(r.done_s for r in done) == 6.0  # strictly serial with 1 slot
+
+
+def test_microbatcher_deadline_flush():
+    mb = MicroBatcher(max_batch=4, max_wait_s=0.1)
+    assert mb.offer(Request(0, arrival_s=0.0), now=0.0) is None
+    out = mb.offer(Request(1, arrival_s=0.15), now=0.15)
+    assert out is not None and len(out) == 2, "deadline flush"
+    for i in range(4):
+        got = mb.offer(Request(i + 2, arrival_s=0.2), now=0.2)
+    assert got is not None and len(got) == 4, "size flush"

@@ -1,0 +1,111 @@
+"""End-to-end system tests: split-inference equivalence (the Janus execution
+engine's core correctness property), engine trace behavior, paper-claim
+reproduction at the policy level."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bandwidth, engine, pruning, profiler, scheduler
+from repro.core.engine import split_inference
+from repro.models import param as param_lib
+from repro.models import vit as vit_lib
+
+
+@pytest.fixture(scope="module")
+def small_vit():
+    cfg = vit_lib.ViTConfig(img_res=48, patch=8, n_layers=6, d_model=64,
+                            n_heads=4, d_ff=128, n_classes=10)
+    params = param_lib.init_params(vit_lib.specs(cfg), jax.random.key(0))
+    images = jax.random.normal(jax.random.key(1), (2, 48, 48, 3))
+    return cfg, params, images
+
+
+def test_split_inference_equals_monolithic_every_split(small_vit):
+    """Jdevice(layers<s) -> wire -> Jcloud(layers>=s) == single forward,
+    for EVERY candidate split point (no quantization on the wire)."""
+    cfg, params, images = small_vit
+    sched = pruning.make_schedule("exponential", 0.3, cfg.n_layers, cfg.num_tokens)
+    mono = vit_lib.forward_janus(params, cfg, images, sched)
+    for split in range(0, cfg.n_layers + 2):
+        logits, _ = split_inference(params, cfg, images, sched, split,
+                                    quantize=False)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(mono),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"split={split}")
+
+
+def test_split_inference_quantized_top1_agrees(small_vit):
+    cfg, params, images = small_vit
+    sched = pruning.make_schedule("exponential", 0.2, cfg.n_layers, cfg.num_tokens)
+    mono = vit_lib.forward_janus(params, cfg, images, sched)
+    logits, payload = split_inference(params, cfg, images, sched, 3, quantize=True)
+    assert payload is not None and payload.nbytes > 0
+    assert (jnp.argmax(logits, -1) == jnp.argmax(mono, -1)).all()
+
+
+def test_pruned_tokens_reduce_payload(small_vit):
+    cfg, params, images = small_vit
+    none_sched = [0] * cfg.n_layers
+    heavy = pruning.make_schedule("exponential", 0.5, cfg.n_layers, cfg.num_tokens)
+    _, p0 = split_inference(params, cfg, images, none_sched, 4, quantize=True)
+    _, p1 = split_inference(params, cfg, images, heavy, 4, quantize=True)
+    assert p1.nbytes < p0.nbytes, "token pruning shrinks the wire payload"
+
+
+def test_janus_vs_vanilla_top1_agreement(small_vit):
+    """Accuracy sanity: moderate merging keeps most top-1 decisions."""
+    cfg, params, _ = small_vit
+    images = jax.random.normal(jax.random.key(5), (16, 48, 48, 3))
+    vanilla = vit_lib.forward(params, cfg, images)
+    sched = pruning.make_schedule("exponential", 0.15, cfg.n_layers, cfg.num_tokens)
+    pruned = vit_lib.forward_janus(params, cfg, images, sched)
+    agree = float((jnp.argmax(vanilla, -1) == jnp.argmax(pruned, -1)).mean())
+    assert agree >= 0.75, agree
+
+
+# ----------------------------------------------------------------- engine
+
+def _paper_profile():
+    cfg = vit_lib.ViTConfig(img_res=384, patch=16, n_layers=24, d_model=1024,
+                            n_heads=16, d_ff=4096)
+    grid = range(32, cfg.num_tokens + 1, 32)
+    return scheduler.ModelProfile(
+        n_layers=cfg.n_layers, x0=cfg.num_tokens, token_bytes=1024.0,
+        raw_input_bytes=384 * 384 * 3 * 0.35,
+        device=profiler.profile_platform(profiler.EDGE_PLATFORM, 1024, 4096, grid),
+        cloud=profiler.profile_platform(profiler.CLOUD_PLATFORM, 1024, 4096, grid),
+        device_embed_s=2e-3, cloud_embed_s=3e-4, head_s=2e-4)
+
+
+def test_engine_janus_dominates_baselines_on_violations():
+    """Fig.7-style: over a fluctuating 4G trace with the paper's 300ms SLA,
+    Janus violates no more than every baseline and accuracy is >= theirs."""
+    prof = _paper_profile()
+    eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=0.3))
+    trace = bandwidth.synthetic_trace("4g", "driving", steps=80, seed=3)
+    stats = {p: eng.run_trace(trace, 80, p) for p in
+             ("janus", "device", "cloud", "mixed")}
+    j = stats["janus"]
+    for name in ("device", "cloud", "mixed"):
+        assert j.violation_ratio <= stats[name].violation_ratio + 1e-9, name
+        assert j.avg_accuracy >= stats[name].avg_accuracy - 1e-9, name
+
+
+def test_engine_good_network_uses_cloud():
+    prof = _paper_profile()
+    eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=0.3))
+    trace = bandwidth.NetworkTrace(np.full(10, 80e6), 0.002, "fast")
+    st = eng.run_trace(trace, 10, "janus")
+    assert all(f.split == 0 for f in st.frames[1:]), \
+        "ample bandwidth -> offload everything (Fig.8, t<12)"
+    assert all(f.alpha == 0 for f in st.frames), "no pruning when SLA is easy"
+
+
+def test_engine_blocked_network_fails_over_to_device():
+    prof = _paper_profile()
+    eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=1.0))
+    trace = bandwidth.NetworkTrace(np.full(6, 1e3), 0.042, "blocked")
+    st = eng.run_trace(trace, 6, "janus")
+    assert all(f.split == prof.n_layers + 1 for f in st.frames[1:]), \
+        "network partition -> device-only failover via the scheduler"

@@ -1,0 +1,85 @@
+"""ToMe merging invariants + the Pallas-scored path + DiT unmerge map."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tome
+from repro.kernels import ops
+
+
+def _xs(b, n, d, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(k1, (b, n, d))
+    metric = jax.random.normal(k2, (b, n, d))
+    return x, metric
+
+
+@given(n=st.integers(6, 80), r_frac=st.floats(0.1, 0.8))
+@settings(max_examples=20, deadline=None)
+def test_merge_conserves_token_mass(n, r_frac):
+    """Size-weighted merging conserves sum(x * size) and sum(size)."""
+    b, d = 2, 8
+    x, metric = _xs(b, n, d)
+    sizes = jnp.ones((b, n))
+    na = (n + 1) // 2
+    r = max(1, min(int(na * r_frac), na - 1))
+    x2, s2 = tome.tome_merge(x, metric, sizes, r)
+    assert x2.shape == (b, n - r, d)
+    np.testing.assert_allclose(np.asarray((x2 * s2[..., None]).sum(1)),
+                               np.asarray((x * sizes[..., None]).sum(1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2.sum(1)), n, rtol=1e-6)
+
+
+def test_cls_token_protected():
+    b, n, d = 2, 20, 8
+    x, metric = _xs(b, n, d, seed=1)
+    sizes = jnp.ones((b, n))
+    x2, s2 = tome.tome_merge(x, metric, sizes, 5, protect_first=True)
+    np.testing.assert_allclose(np.asarray(x2[:, 0]), np.asarray(x[:, 0]),
+                               err_msg="cls must survive unmerged at index 0")
+    np.testing.assert_allclose(np.asarray(s2[:, 0]), 1.0)
+
+
+def test_pallas_scores_path_matches_jnp_path():
+    b, n, d = 2, 34, 16
+    x, metric = _xs(b, n, d, seed=2)
+    sizes = jnp.ones((b, n))
+    out_jnp = tome.tome_merge(x, metric, sizes, 6)
+    out_pl = tome.tome_merge(x, metric, sizes, 6, scores_fn=ops.tome_scores_fn())
+    np.testing.assert_allclose(np.asarray(out_jnp[0]), np.asarray(out_pl[0]),
+                               atol=1e-5)
+
+
+def test_merge_is_weighted_average():
+    """Two identical tokens must merge into exactly that token value."""
+    b, n, d = 1, 6, 4
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(b, n, d)), jnp.float32)
+    x = x.at[0, 2].set(x[0, 1])  # token 2 (A-set) == token 1 (B-set)
+    metric = x
+    sizes = jnp.ones((b, n))
+    x2, s2 = tome.tome_merge(x, metric, sizes, 1, protect_first=True)
+    assert float(jnp.max(s2)) == 2.0
+    merged_idx = int(jnp.argmax(s2[0]))
+    np.testing.assert_allclose(np.asarray(x2[0, merged_idx]),
+                               np.asarray(x[0, 1]), atol=1e-6)
+
+
+def test_dit_unmerge_map_roundtrip():
+    """forward_janus's unmerge map puts every pre-merge position onto the
+    post-merge token that represents it."""
+    from repro.models import dit as dit_lib
+    b, n, d = 2, 16, 8
+    x, metric = _xs(b, n, d, seed=3)
+    idx = tome.bipartite_soft_matching(metric, 4, protect_first=False)
+    m = dit_lib._unmerge_map(n, idx)
+    merged, _ = tome.merge_tokens(x, jnp.ones((b, n)), idx)
+    recon = jnp.take_along_axis(merged, m[..., None], axis=1)
+    assert recon.shape == x.shape
+    # unmerged tokens reconstruct exactly
+    for bi in range(b):
+        unm_positions = np.asarray(idx.unm_idx[bi]) * 2
+        np.testing.assert_allclose(np.asarray(recon[bi, unm_positions]),
+                                   np.asarray(x[bi, unm_positions]), atol=1e-5)
