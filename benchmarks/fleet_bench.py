@@ -1,0 +1,102 @@
+"""Fleet-scale serving benchmark: stream count x network kind sweep.
+
+Sweeps the multi-stream runtime (``repro.serving.fleet``) over stream counts
+(1 -> 128 by default) and network kinds, recording aggregate violation ratio,
+p50/p99 latency, mean queueing delay, cloud utilization, mean batch size, and
+simulation wall time per cell. Emits a JSON perf artifact.
+
+  PYTHONPATH=src python benchmarks/fleet_bench.py \
+      --streams 1 4 16 64 128 --networks 4g 5g wifi \
+      --frames 30 --out fleet_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import common  # noqa: F401  (adds src/ to sys.path)
+
+from repro.core import bandwidth, engine  # noqa: E402
+from repro.serving import fleet  # noqa: E402
+
+
+def bench_cell(profile, n_streams: int, network: str, mobility: str,
+               frames: int, sla_s: float, capacity: int, seed: int) -> dict:
+    streams = [
+        fleet.StreamSpec(
+            trace=bandwidth.synthetic_trace(network, mobility, steps=frames,
+                                            seed=seed + si),
+            n_frames=frames)
+        for si in range(n_streams)
+    ]
+    cloud = dataclasses.replace(fleet.default_cloud_config(n_streams),
+                                capacity=capacity)
+    # deterministic artifact: don't bill wall-clock scheduler time
+    cfg = engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+    rt = fleet.FleetRuntime(profile, cfg, streams, cloud=cloud)
+    t0 = time.perf_counter()
+    fs = rt.run()
+    wall_s = time.perf_counter() - t0
+    return {
+        "streams": n_streams,
+        "network": network,
+        "mobility": mobility,
+        "frames_per_stream": frames,
+        "capacity": capacity,
+        "max_batch": cloud.max_batch,
+        "violation_ratio": fs.violation_ratio,
+        "p50_latency_ms": fs.p50_latency_s * 1e3,
+        "p99_latency_ms": fs.p99_latency_s * 1e3,
+        "avg_queue_ms": fs.avg_queue_s * 1e3,
+        "cloud_utilization": fs.cloud_utilization,
+        "avg_batch_size": fs.avg_batch_size,
+        "aggregate_fps": fs.aggregate_fps,
+        "sim_wall_s": wall_s,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, nargs="+", default=[1, 4, 16, 64, 128])
+    ap.add_argument("--networks", nargs="+", default=["4g", "5g", "wifi"],
+                    choices=["4g", "5g", "wifi"])
+    ap.add_argument("--mobility", default="driving",
+                    choices=["static", "walking", "driving"])
+    ap.add_argument("--frames", type=int, default=30)
+    ap.add_argument("--sla-ms", type=float, default=300.0)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="fleet_bench.json")
+    args = ap.parse_args(argv)
+
+    profile = common.paper_profile()
+    rows = []
+    for network in args.networks:
+        for n in args.streams:
+            row = bench_cell(profile, n, network, args.mobility, args.frames,
+                             args.sla_ms / 1e3, args.capacity, args.seed)
+            rows.append(row)
+            print(f"{network:5s} N={n:4d} viol={row['violation_ratio']:.3f} "
+                  f"p50={row['p50_latency_ms']:7.1f}ms "
+                  f"p99={row['p99_latency_ms']:8.1f}ms "
+                  f"queue={row['avg_queue_ms']:6.2f}ms "
+                  f"util={row['cloud_utilization']:.2f} "
+                  f"fps={row['aggregate_fps']:7.1f} "
+                  f"wall={row['sim_wall_s']:.2f}s")
+
+    artifact = {
+        "benchmark": "fleet_bench",
+        "config": {"mobility": args.mobility, "frames": args.frames,
+                   "sla_ms": args.sla_ms, "capacity": args.capacity,
+                   "seed": args.seed},
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[fleet_bench] wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fleet serving demo: many concurrent Janus client streams, one shared
+cloud tier with finite batched capacity.
+
+Each stream gets its own seeded network trace and bandwidth estimator; cloud
+partitions are micro-batched onto a small pool of executors, so stream count
+vs capacity shows up directly as queueing delay in the per-frame latency.
+
+    PYTHONPATH=src python examples/fleet_serving.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+# a comfortable fleet, then the same fleet on a single cloud executor
+for capacity in (4, 1):
+    print(f"\n=== 16 driving-4G streams, cloud capacity={capacity} ===")
+    serve.main(["--streams", "16", "--network", "4g", "--mobility", "driving",
+                "--frames", "30", "--sla-ms", "300",
+                "--capacity", str(capacity)])

@@ -22,6 +22,13 @@ Mixed for ViTs), each with ToMe's maximum fixed pruning level.
 Fault story: a blocked network (bandwidth ~ 0) drives the scheduler to the
 device-only split — Janus's scheduler *is* the failover path for network
 partitions (DESIGN.md §4).
+
+The per-frame step (``plan_frame``: decide -> account; ``frame_result``:
+stamp + SLA check; caller observes the true bandwidth) is factored out of
+``run_trace`` so the single-stream loop here and the multi-stream fleet
+runtime (``repro.serving.fleet``) share one code path; the fleet additionally
+needs ``account_breakdown``'s device/comm/cloud phase split to place cloud
+work on a shared, finite tier.
 """
 from __future__ import annotations
 
@@ -47,6 +54,21 @@ class EngineConfig:
     quantize_payload: bool = True
     execute: bool = False
     baseline_fixed_r: int = 23  # ToMe max fixed pruning (ViT-L@384; §V-B)
+    include_scheduler_overhead: bool = True  # bill Algorithm-1 wall time
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBreakdown:
+    """Per-frame latency split into the three serving phases. The fleet
+    runtime needs the phases separately: device+comm run on the client's own
+    hardware/link, while ``cloud_s`` occupies the shared cloud tier."""
+    device_s: float
+    comm_s: float
+    cloud_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.device_s + self.comm_s + self.cloud_s
 
 
 @dataclasses.dataclass
@@ -59,6 +81,19 @@ class FrameResult:
     accuracy: float
     payload_bytes: float
     bandwidth_bps: float
+    queue_s: float = 0.0  # extra delay beyond the standalone frame latency
+    # (shared-cloud queueing + batch inflation; 0 for the single-stream engine)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameStep:
+    """One planned/accounted frame: the output of ``decide -> account`` before
+    it is stamped into a ``FrameResult`` (which may add queueing delay)."""
+    decision: Decision
+    breakdown: LatencyBreakdown
+    payload_bytes: float
+    bandwidth_bps: float
+    accuracy: float
 
 
 @dataclasses.dataclass
@@ -79,12 +114,24 @@ class RunStats:
         return float(np.mean([f.latency_s for f in self.frames]))
 
     @property
+    def p50_latency_s(self) -> float:
+        return float(np.percentile([f.latency_s for f in self.frames], 50))
+
+    @property
+    def p99_latency_s(self) -> float:
+        return float(np.percentile([f.latency_s for f in self.frames], 99))
+
+    @property
     def avg_accuracy(self) -> float:
         return float(np.mean([f.accuracy for f in self.frames]))
 
     @property
     def avg_deviation(self) -> float:
         return float(np.mean([f.deviation for f in self.frames]))
+
+    @property
+    def avg_queue_s(self) -> float:
+        return float(np.mean([f.queue_s for f in self.frames]))
 
 
 # ---------------------------------------------------------------------------
@@ -142,20 +189,28 @@ class JanusEngine:
         self._estimator = HarmonicMeanEstimator()
 
     # -- latency accounting -------------------------------------------------
-    def _account(self, counts: Sequence[int], split: int, payload_bytes: float,
-                 bandwidth_bps: float, rtt_s: float) -> float:
+    def account_breakdown(self, counts: Sequence[int], split: int,
+                          payload_bytes: float, bandwidth_bps: float,
+                          rtt_s: float) -> LatencyBreakdown:
+        """Phase-separated latency for one frame at the given split."""
         p = self.profile
         n = p.n_layers
         if split == 0:
             comm = p.raw_input_bytes * 8 / bandwidth_bps + rtt_s
-            compute = p.cloud_embed_s + sum(p.cloud.predict(counts[l]) for l in range(n)) + p.head_s
-            return comm + compute
+            cloud = p.cloud_embed_s + sum(p.cloud.predict(counts[l]) for l in range(n)) + p.head_s
+            return LatencyBreakdown(0.0, comm, cloud)
         if split == n + 1:
-            return p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(n)) + p.head_s
+            dev = p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(n)) + p.head_s
+            return LatencyBreakdown(dev, 0.0, 0.0)
         dev = p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(split))
         comm = payload_bytes * 8 / bandwidth_bps + rtt_s
         cloud = sum(p.cloud.predict(counts[l]) for l in range(split, n)) + p.head_s
-        return dev + comm + cloud
+        return LatencyBreakdown(dev, comm, cloud)
+
+    def _account(self, counts: Sequence[int], split: int, payload_bytes: float,
+                 bandwidth_bps: float, rtt_s: float) -> float:
+        return self.account_breakdown(counts, split, payload_bytes,
+                                      bandwidth_bps, rtt_s).total_s
 
     def _payload_bytes(self, counts: Sequence[int], split: int) -> float:
         if split in (0, self.profile.n_layers + 1):
@@ -183,6 +238,59 @@ class JanusEngine:
             return Decision(0.0, s, min(lat_d, lat_c), True, fixed)
         raise ValueError(policy)
 
+    # -- per-frame step (shared by single-stream and fleet paths) -------------
+    def plan_frame(self, frame_idx: int, trace: NetworkTrace, policy: str,
+                   estimator: HarmonicMeanEstimator,
+                   images: jax.Array | None = None) -> FrameStep:
+        """``decide -> account`` for one frame. Pure with respect to engine
+        state: the caller owns the estimator and must ``observe`` the returned
+        ``bandwidth_bps`` after the frame (the fleet keeps one estimator per
+        stream)."""
+        b_est = estimator.estimate()
+        dec = self._decide(policy, b_est, trace.rtt_s)
+        counts = pruning.token_counts(self.profile.x0, dec.schedule)
+        b_true = trace.at(frame_idx)
+
+        payload_bytes = self._payload_bytes(counts, dec.split)
+        if self.cfg.execute and self.params is not None and images is not None:
+            # the timing plane may model a bigger ViT than the executed
+            # one — remap (alpha, split) onto the executed geometry
+            n_exec = self.model_cfg.n_layers
+            sched_exec = pruning.make_schedule(
+                self.profile.schedule_kind, dec.alpha, n_exec,
+                self.model_cfg.num_tokens)
+            n_prof = self.profile.n_layers
+            if dec.split >= n_prof + 1:
+                split_exec = n_exec + 1
+            else:
+                split_exec = min(round(dec.split * n_exec / n_prof), n_exec)
+            _, payload = split_inference(self.params, self.model_cfg, images,
+                                         sched_exec, split_exec,
+                                         quantize=self.cfg.quantize_payload)
+            if payload is not None:
+                payload_bytes = payload.nbytes
+
+        bd = self.account_breakdown(counts, dec.split, payload_bytes, b_true,
+                                    trace.rtt_s)
+        acc = self.acc.accuracy(self.profile.x0, dec.schedule)
+        return FrameStep(decision=dec, breakdown=bd, payload_bytes=payload_bytes,
+                         bandwidth_bps=b_true, accuracy=acc)
+
+    def overhead_s(self, step: FrameStep) -> float:
+        return step.decision.scheduler_overhead_s \
+            if self.cfg.include_scheduler_overhead else 0.0
+
+    def frame_result(self, step: FrameStep, queue_s: float = 0.0) -> FrameResult:
+        """Stamp a planned frame into a result; ``queue_s`` is any extra delay
+        the shared cloud tier added on top of the standalone latency."""
+        lat = step.breakdown.total_s + self.overhead_s(step) + queue_s
+        return FrameResult(
+            latency_s=lat, violated=lat > self.cfg.sla_s,
+            deviation=max(0.0, (lat - self.cfg.sla_s) / self.cfg.sla_s),
+            alpha=step.decision.alpha, split=step.decision.split,
+            accuracy=step.accuracy, payload_bytes=step.payload_bytes,
+            bandwidth_bps=step.bandwidth_bps, queue_s=queue_s)
+
     # -- main loop ------------------------------------------------------------
     def run_trace(self, trace: NetworkTrace, n_frames: int, policy: str = "janus",
                   images: jax.Array | None = None) -> RunStats:
@@ -190,37 +298,7 @@ class JanusEngine:
             cold_start_bps=float(np.mean(trace.bps)))
         frames: list[FrameResult] = []
         for i in range(n_frames):
-            b_est = self._estimator.estimate()
-            dec = self._decide(policy, b_est, trace.rtt_s)
-            counts = pruning.token_counts(self.profile.x0, dec.schedule)
-            b_true = trace.at(i)
-
-            payload_bytes = self._payload_bytes(counts, dec.split)
-            if self.cfg.execute and self.params is not None and images is not None:
-                # the timing plane may model a bigger ViT than the executed
-                # one — remap (alpha, split) onto the executed geometry
-                n_exec = self.model_cfg.n_layers
-                sched_exec = pruning.make_schedule(
-                    self.profile.schedule_kind, dec.alpha, n_exec,
-                    self.model_cfg.num_tokens)
-                n_prof = self.profile.n_layers
-                if dec.split >= n_prof + 1:
-                    split_exec = n_exec + 1
-                else:
-                    split_exec = min(round(dec.split * n_exec / n_prof), n_exec)
-                _, payload = split_inference(self.params, self.model_cfg, images,
-                                             sched_exec, split_exec,
-                                             quantize=self.cfg.quantize_payload)
-                if payload is not None:
-                    payload_bytes = payload.nbytes
-
-            lat = self._account(counts, dec.split, payload_bytes, b_true, trace.rtt_s)
-            lat += dec.scheduler_overhead_s
-            acc = self.acc.accuracy(self.profile.x0, dec.schedule)
-            frames.append(FrameResult(
-                latency_s=lat, violated=lat > self.cfg.sla_s,
-                deviation=max(0.0, (lat - self.cfg.sla_s) / self.cfg.sla_s),
-                alpha=dec.alpha, split=dec.split, accuracy=acc,
-                payload_bytes=payload_bytes, bandwidth_bps=b_true))
-            self._estimator.observe(b_true)
+            step = self.plan_frame(i, trace, policy, self._estimator, images=images)
+            frames.append(self.frame_result(step))
+            self._estimator.observe(step.bandwidth_bps)
         return RunStats(frames)

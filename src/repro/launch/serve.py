@@ -5,12 +5,29 @@ split execution with LZW transport, over a synthetic dynamic network trace —
 with REAL model math on a reduced ViT (CPU) and paper-calibrated platform
 latency models for the timing plane.
 
+Single stream (the paper's §V-B setting — policy comparison table):
+
   PYTHONPATH=src python -m repro.launch.serve --network 4g --mobility driving \
       --frames 60 --sla-ms 300
+
+Fleet mode (``--streams N``): N concurrent client streams, each with its own
+seeded network trace, bandwidth estimator, and Janus scheduler state, sharing
+one cloud tier with finite batched capacity (``repro.serving.fleet``). Prints
+per-stream and aggregate stats (violation ratio, p50/p99 latency, queueing
+delay, cloud utilization):
+
+  PYTHONPATH=src python -m repro.launch.serve --streams 64 --network 4g \
+      --mobility driving
+
+Fleet knobs: ``--capacity`` (concurrent cloud batch executors), ``--max-batch``
+/ ``--batch-wait-ms`` (micro-batch window; default max-batch min(8, N) so
+``--streams 1`` reproduces the single-stream engine exactly), ``--period-ms``
+(min frame spacing per stream; 0 = closed loop).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -19,6 +36,7 @@ from repro.configs import get_arch
 from repro.core import bandwidth, engine, profiler, pruning, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
+from repro.serving import fleet as fleet_lib
 
 
 def make_profile(cfg: vit_lib.ViTConfig, sla_note: str = "") -> scheduler.ModelProfile:
@@ -36,6 +54,43 @@ def make_profile(cfg: vit_lib.ViTConfig, sla_note: str = "") -> scheduler.ModelP
         head_s=profiler.CLOUD_PLATFORM.head_latency(cfg.d_model, cfg.n_classes))
 
 
+def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
+    """``--streams N`` mode: N seeded streams through one shared cloud tier."""
+    streams = [
+        fleet_lib.StreamSpec(
+            trace=bandwidth.synthetic_trace(args.network, args.mobility,
+                                            steps=args.frames, seed=args.seed + si),
+            n_frames=args.frames, policy=args.policy,
+            period_s=args.period_ms / 1e3)
+        for si in range(args.streams)
+    ]
+    cloud = dataclasses.replace(
+        fleet_lib.default_cloud_config(args.streams),
+        capacity=args.capacity,
+        max_wait_s=args.batch_wait_ms / 1e3,
+        **({"max_batch": args.max_batch} if args.max_batch else {}))
+    rt = fleet_lib.FleetRuntime(profile, eng_cfg, streams, cloud=cloud,
+                                model_cfg=model_cfg, params=params)
+    fs = rt.run(images=images)
+
+    print(f"[fleet] streams={args.streams} frames/stream={args.frames} "
+          f"policy={args.policy} sla={args.sla_ms}ms "
+          f"cloud(capacity={cloud.capacity} max_batch={cloud.max_batch} "
+          f"wait={cloud.max_wait_s*1e3:.1f}ms)")
+    print(f"{'stream':>6s} {'trace':24s} {'viol%':>6s} {'p50_ms':>8s} "
+          f"{'p99_ms':>9s} {'queue_ms':>9s}")
+    for si, st in enumerate(fs.per_stream):
+        print(f"{si:6d} {streams[si].trace.name:24s} {100*st.violation_ratio:6.1f} "
+              f"{st.p50_latency_s*1e3:8.1f} {st.p99_latency_s*1e3:9.1f} "
+              f"{st.avg_queue_s*1e3:9.2f}")
+    print(f"[fleet aggregate] frames={len(fs.all_frames)} "
+          f"viol%={100*fs.violation_ratio:.1f} p50={fs.p50_latency_s*1e3:.1f}ms "
+          f"p99={fs.p99_latency_s*1e3:.1f}ms queue={fs.avg_queue_s*1e3:.2f}ms "
+          f"cloud_util={100*fs.cloud_utilization:.1f}% "
+          f"avg_batch={fs.avg_batch_size:.2f} fps={fs.aggregate_fps:.1f}")
+    return fs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--network", default="4g", choices=["4g", "5g", "wifi"])
@@ -46,6 +101,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--execute", action="store_true",
                     help="run real split-model math on a reduced ViT")
+    ap.add_argument("--streams", type=int, default=0,
+                    help="fleet mode: N concurrent client streams through a "
+                         "shared cloud tier (0 = classic single-stream mode)")
+    ap.add_argument("--policy", default="janus",
+                    choices=["janus", "device", "cloud", "mixed"],
+                    help="fleet mode: per-stream scheduling policy")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="fleet mode: concurrent cloud batch executors")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="fleet mode: micro-batch size (0 = min(8, streams))")
+    ap.add_argument("--batch-wait-ms", type=float, default=5.0,
+                    help="fleet mode: micro-batch deadline window")
+    ap.add_argument("--period-ms", type=float, default=0.0,
+                    help="fleet mode: min frame spacing per stream")
     args = ap.parse_args(argv)
 
     paper = get_arch("janus-vit-l384")
@@ -59,12 +128,15 @@ def main(argv=None):
         images = jax.random.normal(jax.random.key(1),
                                    (1, model_cfg.img_res, model_cfg.img_res, 3))
 
+    eng_cfg = engine.EngineConfig(sla_s=args.sla_ms / 1e3, execute=args.execute)
+    if args.streams > 0:
+        run_fleet(args, profile, eng_cfg, model_cfg=model_cfg, params=params,
+                  images=images)
+        return
+
     trace = bandwidth.synthetic_trace(args.network, args.mobility,
                                       steps=args.frames, seed=args.seed)
-    eng = engine.JanusEngine(
-        profile, engine.EngineConfig(sla_s=args.sla_ms / 1e3,
-                                     execute=args.execute),
-        model_cfg=model_cfg, params=params)
+    eng = engine.JanusEngine(profile, eng_cfg, model_cfg=model_cfg, params=params)
 
     print(f"[serve] trace={trace.name} sla={args.sla_ms}ms frames={args.frames}")
     header = f"{'policy':8s} {'viol%':>6s} {'fps':>7s} {'lat_ms':>8s} {'acc':>7s} {'dev%':>6s}"

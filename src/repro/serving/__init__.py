@@ -1,0 +1,12 @@
+"""Serving tier: request batching (``batcher``) and the multi-stream fleet
+runtime (``fleet``)."""
+from repro.serving.batcher import (ContinuousBatcher, KVSlotManager,
+                                   MicroBatcher, Request)
+from repro.serving.fleet import (CloudTierConfig, FleetRuntime, FleetStats,
+                                 StreamSpec, default_cloud_config)
+
+__all__ = [
+    "ContinuousBatcher", "KVSlotManager", "MicroBatcher", "Request",
+    "CloudTierConfig", "FleetRuntime", "FleetStats", "StreamSpec",
+    "default_cloud_config",
+]

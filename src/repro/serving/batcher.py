@@ -68,9 +68,19 @@ class ContinuousBatcher:
             self.active[slot] = req
 
     def step(self):
-        """One decode step across all active slots."""
+        """One decode step across all active slots.
+
+        When no slot is active the clock jumps to the next queued arrival
+        instead of billing an idle gap as a decode step — otherwise low-load
+        gaps distort completion times and burn ``max_steps``.
+        """
         self._admit()
-        self.now += self.step_time_fn(max(len(self.active), 1))
+        if not self.active:
+            if not self.queue:
+                return
+            self.now = max(self.now, self.queue[0].arrival_s)
+            self._admit()
+        self.now += self.step_time_fn(len(self.active))
         finished = []
         for slot, req in list(self.active.items()):
             req.generated += 1
@@ -103,10 +113,31 @@ class MicroBatcher:
         if len(self.pending) >= self.max_batch:
             out, self.pending = self.pending, []
             return out
-        if self.pending and now - self.pending[0].arrival_s >= self.max_wait_s:
+        return self.poll(now)
+
+    def poll(self, now: float) -> list[Request] | None:
+        """Expire the pending batch once the oldest frame's deadline passes.
+
+        ``offer`` alone only checks the deadline when a *new* frame arrives, so
+        under low load a pending batch would go stale indefinitely. The serving
+        loop must call ``poll`` at (or schedule a timer for) ``deadline()``.
+
+        The comparison is phrased as ``now >= arrival + max_wait`` — the exact
+        expression ``deadline()`` returns — so a timer that fires at the
+        deadline always flushes (``now - arrival >= max_wait`` can round the
+        other way in floating point and strand the batch).
+        """
+        if self.pending and now >= self.pending[0].arrival_s + self.max_wait_s:
             out, self.pending = self.pending, []
             return out
         return None
+
+    def deadline(self) -> float | None:
+        """Absolute time by which the current pending batch must flush, or
+        ``None`` when nothing is pending."""
+        if not self.pending:
+            return None
+        return self.pending[0].arrival_s + self.max_wait_s
 
     def flush(self) -> list[Request]:
         out, self.pending = self.pending, []

@@ -1,0 +1,268 @@
+"""Multi-stream Janus serving runtime: N clients, one shared cloud tier.
+
+The paper's evaluation (§V-B) runs a single client stream; the regime the
+ROADMAP cares about — and the one DeViT-style collaborative inference and
+near-edge "serve many edge clients" systems study — is many concurrent streams
+contending for a shared cloud. This module drives N closed-loop client
+streams, each with
+
+  * its own ``NetworkTrace`` (its radio conditions),
+  * its own ``HarmonicMeanEstimator`` (bandwidth belief never leaks across
+    clients),
+  * its own SLA / policy / per-stream Janus scheduler state
+    (a dedicated ``JanusEngine`` sharing the fitted ``ModelProfile``),
+
+through a shared cloud tier with *finite batched capacity*: cloud-partition
+work items are grouped by a ``MicroBatcher`` (deadline window ``max_wait_s`` or
+``max_batch``, whichever first — expiry via the ``poll`` path), then executed
+on one of ``capacity`` batch executors. When every executor is busy a batch
+queues, and the queueing delay lands in the affected frames' latency
+(``FrameResult.queue_s``).
+
+The per-frame physics is exactly the single-stream engine's
+``plan_frame`` (decide -> account -> observe), so with one stream,
+``max_batch=1`` and free capacity the fleet reproduces ``JanusEngine.
+run_trace`` numbers identically — tested in ``tests/test_serving_fleet.py``.
+
+Simulation model (discrete-event, one heap):
+
+  frame start t0 (closed loop: previous frame done, or the stream period)
+    -> scheduler overhead + device partition + uplink transfer on the
+       client's own resources: ready at t0 + overhead + device_s + comm_s
+    -> if the decision has cloud work: offer to the shared MicroBatcher;
+       a flushed batch runs for ``max(cloud_s) * (1 + batch_growth*(B-1))``
+       on the earliest-free executor
+    -> frame completes; latency = completion - t0; next frame starts.
+
+Device-only decisions (split = N+1, the blocked-network failover) never touch
+the cloud tier, so a saturated cloud pushes Janus streams toward local
+execution exactly as the paper's scheduler would under a slow network.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import itertools
+
+import numpy as np
+
+from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
+from repro.core.engine import EngineConfig, FrameResult, FrameStep, JanusEngine, RunStats
+from repro.core.pruning import AccuracyModel
+from repro.core.scheduler import ModelProfile
+from repro.serving.batcher import MicroBatcher, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One client stream of the fleet."""
+    trace: NetworkTrace
+    n_frames: int
+    policy: str = "janus"
+    sla_s: float | None = None   # per-stream SLA override (None = fleet default)
+    period_s: float = 0.0        # min frame spacing; 0 = back-to-back closed loop
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudTierConfig:
+    """Shared cloud tier: ``capacity`` concurrent batch executors fed by a
+    deadline-window micro-batcher. ``batch_growth`` models the sub-linear cost
+    of batched execution: a B-frame batch runs for
+    ``max(cloud_s) * (1 + batch_growth * (B - 1))``."""
+    capacity: int = 4
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+    batch_growth: float = 0.15
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"cloud capacity must be >= 1, got {self.capacity}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {self.max_wait_s}")
+
+
+def default_cloud_config(n_streams: int) -> CloudTierConfig:
+    """Sensible shared-tier defaults for N streams. With one stream the
+    batcher is transparent (``max_batch=1`` flushes every offer immediately),
+    which is what makes the N=1 fleet bit-identical to the single-stream
+    engine."""
+    return CloudTierConfig(max_batch=max(1, min(8, n_streams)))
+
+
+@dataclasses.dataclass
+class FleetStats:
+    per_stream: list[RunStats]
+    cloud_busy_s: float
+    horizon_s: float
+    capacity: int
+    batch_sizes: list[int]
+
+    @functools.cached_property
+    def aggregate(self) -> RunStats:
+        """All streams' frames as one RunStats (single source for the frame-
+        level statistics; fleet-level extras like utilization live here)."""
+        return RunStats(self.all_frames)
+
+    @functools.cached_property
+    def all_frames(self) -> list[FrameResult]:
+        return [f for st in self.per_stream for f in st.frames]
+
+    @property
+    def violation_ratio(self) -> float:
+        return self.aggregate.violation_ratio
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.aggregate.p50_latency_s
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.aggregate.p99_latency_s
+
+    @property
+    def avg_latency_s(self) -> float:
+        return self.aggregate.avg_latency_s
+
+    @property
+    def avg_queue_s(self) -> float:
+        return self.aggregate.avg_queue_s
+
+    @property
+    def cloud_utilization(self) -> float:
+        if self.horizon_s <= 0:
+            return 0.0
+        return min(1.0, self.cloud_busy_s / (self.capacity * self.horizon_s))
+
+    @property
+    def avg_batch_size(self) -> float:
+        return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
+
+    @property
+    def aggregate_fps(self) -> float:
+        return len(self.all_frames) / self.horizon_s if self.horizon_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class _CloudItem:
+    stream: int
+    frame: int
+    step: FrameStep
+    t0: float          # frame start (latency is measured from here)
+    ready_s: float     # device+comm done; enters the shared tier here
+
+
+class FleetRuntime:
+    """Drives N streams through one shared cloud tier (see module docstring)."""
+
+    def __init__(self, profile: ModelProfile, base_cfg: EngineConfig,
+                 streams: list[StreamSpec],
+                 cloud: CloudTierConfig | None = None,
+                 acc_model: AccuracyModel | None = None,
+                 model_cfg=None, params=None):
+        self.streams = streams
+        self.cloud = cloud or default_cloud_config(len(streams))
+        acc = acc_model or AccuracyModel()
+        # per-stream scheduler state: a dedicated engine (shared profile/model)
+        # so per-stream SLAs drive per-stream decisions
+        self.engines = [
+            JanusEngine(profile,
+                        dataclasses.replace(
+                            base_cfg,
+                            sla_s=base_cfg.sla_s if s.sla_s is None else s.sla_s),
+                        acc_model=acc, model_cfg=model_cfg, params=params)
+            for s in streams
+        ]
+
+    def run(self, images=None) -> FleetStats:
+        streams, cloud = self.streams, self.cloud
+        estimators = [HarmonicMeanEstimator(cold_start_bps=float(np.mean(s.trace.bps)))
+                      for s in streams]
+        results: list[list[FrameResult]] = [[] for _ in streams]
+        batch_sizes: list[int] = []
+        micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
+        executors: list[float] = []   # busy-until heap, capped at `capacity`
+        items: dict[int, _CloudItem] = {}
+        rid = itertools.count()
+        seq = itertools.count()       # FIFO tie-break for simultaneous events
+        events: list = []             # (time, seq, callback)
+        state = {"busy": 0.0, "horizon": 0.0}
+
+        def push(t: float, fn) -> None:
+            heapq.heappush(events, (t, next(seq), fn))
+
+        def start_frame(si: int, fi: int, t0: float) -> None:
+            eng, spec = self.engines[si], streams[si]
+            step = eng.plan_frame(fi, spec.trace, spec.policy, estimators[si],
+                                  images=images)
+            estimators[si].observe(step.bandwidth_bps)
+            bd = step.breakdown
+            local_done = t0 + eng.overhead_s(step) + bd.device_s + bd.comm_s
+            if bd.cloud_s <= 0.0:  # device-only split: never touches the cloud
+                push(local_done, lambda t: finish_frame(si, fi, step, t0, t))
+            else:
+                item = _CloudItem(si, fi, step, t0, local_done)
+                push(local_done, lambda t, item=item: offer_item(item, t))
+
+        def offer_item(item: _CloudItem, now: float) -> None:
+            r = next(rid)
+            items[r] = item
+            batch = micro.offer(Request(r, arrival_s=now), now)
+            if batch is not None:
+                dispatch(batch, now)
+            elif len(micro.pending) == 1:
+                # the batch just became non-empty: one expiry timer covers it
+                # (the deadline is keyed to pending[0] and never moves, so
+                # later joiners would only add redundant heap events)
+                push(micro.deadline(), poll_micro)
+
+        def poll_micro(now: float) -> None:
+            batch = micro.poll(now)
+            if batch is not None:
+                dispatch(batch, now)
+
+        def dispatch(batch: list[Request], now: float) -> None:
+            members = [items.pop(r.rid) for r in batch]
+            service = max(m.step.breakdown.cloud_s for m in members) \
+                * (1.0 + cloud.batch_growth * (len(batch) - 1))
+            if len(executors) < cloud.capacity:
+                start = now
+            else:  # all executors busy (or recently so): wait for earliest-free
+                start = max(now, heapq.heappop(executors))
+            heapq.heappush(executors, start + service)
+            state["busy"] += service
+            batch_sizes.append(len(batch))
+            done = start + service
+            for m in members:
+                push(done, lambda t, m=m: finish_frame(m.stream, m.frame,
+                                                       m.step, m.t0, t))
+
+        def finish_frame(si: int, fi: int, step: FrameStep, t0: float,
+                         tf: float) -> None:
+            eng, spec = self.engines[si], streams[si]
+            standalone = step.breakdown.total_s + eng.overhead_s(step)
+            queue_s = tf - t0 - standalone
+            if queue_s < 1e-12:  # float residue from event-time arithmetic
+                queue_s = 0.0
+            results[si].append(eng.frame_result(step, queue_s=queue_s))
+            state["horizon"] = max(state["horizon"], tf)
+            if fi + 1 < spec.n_frames:
+                start_frame(si, fi + 1, max(tf, t0 + spec.period_s))
+
+        for si in range(len(streams)):
+            start_frame(si, 0, 0.0)
+        while True:
+            while events:
+                t, _, fn = heapq.heappop(events)
+                fn(t)
+            if not micro.pending:  # defensive: a poll timer covers every batch
+                break
+            dispatch(micro.flush(), state["horizon"])
+
+        return FleetStats(per_stream=[RunStats(fr) for fr in results],
+                          cloud_busy_s=state["busy"],
+                          horizon_s=state["horizon"],
+                          capacity=cloud.capacity,
+                          batch_sizes=batch_sizes)

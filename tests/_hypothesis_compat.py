@@ -1,0 +1,149 @@
+"""Property-test compatibility layer: real ``hypothesis`` when installed,
+otherwise a tiny deterministic stand-in.
+
+The seed environment does not ship ``hypothesis``, so the property tests in
+``test_compression_and_optim.py`` / ``test_janus_policies.py`` / ``test_moe.py``
+/ ``test_tome.py`` import ``given`` / ``settings`` / ``st`` from here instead.
+When ``hypothesis`` is available, those are the genuine articles and nothing
+changes. When it is absent, the stand-in runs each property over a fixed,
+seeded example set:
+
+* the cartesian product of each strategy's *corner* values first (endpoints —
+  this is what catches the ``alpha == 0`` / ``x0 - 1 < n`` style branches), then
+* pseudo-random draws from ``numpy.random.default_rng`` seeded by the test
+  name, until ``max_examples`` cases have run.
+
+No shrinking, no database — just deterministic coverage on a bare machine.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import itertools
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def corners(self) -> list:
+            return []
+
+        def draw(self, rng: np.random.Generator):
+            raise NotImplementedError
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def corners(self):
+            return [self.lo, self.hi]
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def corners(self):
+            return [self.lo, self.hi] if self.hi != self.lo else [self.lo]
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Binary(_Strategy):
+        def __init__(self, min_size=0, max_size=64):
+            self.lo, self.hi = int(min_size), int(max_size)
+
+        def corners(self):
+            out = [bytes(self.lo)]  # all-zero at min length (b"" when lo=0)
+            rep = b"janus" * (max(self.hi, 5) // 5)
+            out.append(rep[: self.hi])  # highly repetitive at max length
+            return out
+
+        def draw(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def corners(self):
+            if len(self.elements) == 1:
+                return [self.elements[0]]
+            return [self.elements[0], self.elements[-1]]
+
+        def draw(self, rng):
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elem = elements
+            self.lo, self.hi = int(min_size), int(max_size)
+
+        def corners(self):
+            ec = self.elem.corners() or [None]
+            n = max(self.lo, 1)
+            return [[c] * n for c in ec]
+
+        def draw(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elem.draw(rng) for _ in range(n)]
+
+    class st:  # noqa: N801 - mirrors ``hypothesis.strategies`` usage
+        floats = _Floats
+        integers = _Integers
+        binary = _Binary
+        sampled_from = _SampledFrom
+        lists = _Lists
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        """Record ``max_examples`` on the decorated function; the rest of the
+        real API (deadline, profiles, ...) is accepted and ignored."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            names = list(inspect.signature(fn).parameters)
+            strategies = dict(zip(names, pos_strategies))
+            strategies.update(kw_strategies)
+            keys = list(strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(
+                    wrapper, "_shim_max_examples",
+                    getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES))
+                cases = list(itertools.product(
+                    *[strategies[k].corners() for k in keys]))[:max_examples]
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                while len(cases) < max_examples:
+                    cases.append(tuple(strategies[k].draw(rng) for k in keys))
+                for case in cases:
+                    bound = dict(zip(keys, case))
+                    bound.update(kwargs)
+                    fn(*args, **bound)
+
+            # hide the strategy-filled params from pytest's fixture resolver
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in keys])
+            return wrapper
+
+        return deco

@@ -6,3 +6,17 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def small_model_profile():
+    """Fast fitted ModelProfile (d=256, 12 layers, 145 tokens) shared by the
+    scheduler-policy and fleet test suites."""
+    from repro.core import profiler, scheduler
+
+    d, dff, x0, n = 256, 1024, 145, 12
+    grid = range(16, x0 + 1, 16)
+    return scheduler.ModelProfile(
+        n_layers=n, x0=x0, token_bytes=d * 1.0, raw_input_bytes=50_000,
+        device=profiler.profile_platform(profiler.EDGE_PLATFORM, d, dff, grid),
+        cloud=profiler.profile_platform(profiler.CLOUD_PLATFORM, d, dff, grid),
+        device_embed_s=1e-3, cloud_embed_s=1e-4, head_s=1e-4)

@@ -33,6 +33,7 @@ def _init_inputs(bundle, arch, seed=0):
     return tuple(out)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_name", list_archs())
 def test_train_or_serve_smoke(arch_name):
     arch = get_arch(arch_name)

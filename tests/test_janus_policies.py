@@ -5,9 +5,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core import bandwidth, pruning, splitter, scheduler, profiler
+from repro.core import bandwidth, pruning, splitter, scheduler
 
 
 # ---------------------------------------------------------------- pruning
@@ -104,14 +104,7 @@ def test_larger_k_denser(n, k1, k2):
 
 # ---------------------------------------------------------------- scheduler
 
-def _profile():
-    d, dff, x0, n = 256, 1024, 145, 12
-    grid = range(16, x0 + 1, 16)
-    return scheduler.ModelProfile(
-        n_layers=n, x0=x0, token_bytes=d * 1.0, raw_input_bytes=50_000,
-        device=profiler.profile_platform(profiler.EDGE_PLATFORM, d, dff, grid),
-        cloud=profiler.profile_platform(profiler.CLOUD_PLATFORM, d, dff, grid),
-        device_embed_s=1e-3, cloud_embed_s=1e-4, head_s=1e-4)
+from conftest import small_model_profile as _profile  # noqa: E402
 
 
 def test_scheduler_prefers_low_alpha():

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models import moe, param as param_lib
 
@@ -68,6 +68,7 @@ def test_gradients_flow():
     assert all(np.isfinite(v) and v > 0 for v in norms.values()), norms
 
 
+@pytest.mark.slow
 @given(t=st.sampled_from([32, 64, 96, 128]), k=st.integers(1, 3))
 @settings(max_examples=8, deadline=None)
 def test_group_fallback_any_token_count(t, k):

@@ -9,6 +9,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import moe, moe_a2a, param
 
@@ -54,8 +55,7 @@ A2A_SCRIPT = textwrap.dedent("""
     assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g))
     print("A2A_OK")
 """)
-
-
+@pytest.mark.slow
 def test_a2a_matches_dense_oracle_on_mesh():
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     out = subprocess.run([sys.executable, "-c", A2A_SCRIPT.format(src=src)],

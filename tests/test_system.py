@@ -19,8 +19,7 @@ def small_vit():
     params = param_lib.init_params(vit_lib.specs(cfg), jax.random.key(0))
     images = jax.random.normal(jax.random.key(1), (2, 48, 48, 3))
     return cfg, params, images
-
-
+@pytest.mark.slow
 def test_split_inference_equals_monolithic_every_split(small_vit):
     """Jdevice(layers<s) -> wire -> Jcloud(layers>=s) == single forward,
     for EVERY candidate split point (no quantization on the wire)."""
@@ -42,8 +41,7 @@ def test_split_inference_quantized_top1_agrees(small_vit):
     logits, payload = split_inference(params, cfg, images, sched, 3, quantize=True)
     assert payload is not None and payload.nbytes > 0
     assert (jnp.argmax(logits, -1) == jnp.argmax(mono, -1)).all()
-
-
+@pytest.mark.slow
 def test_pruned_tokens_reduce_payload(small_vit):
     cfg, params, images = small_vit
     none_sched = [0] * cfg.n_layers
@@ -51,8 +49,7 @@ def test_pruned_tokens_reduce_payload(small_vit):
     _, p0 = split_inference(params, cfg, images, none_sched, 4, quantize=True)
     _, p1 = split_inference(params, cfg, images, heavy, 4, quantize=True)
     assert p1.nbytes < p0.nbytes, "token pruning shrinks the wire payload"
-
-
+@pytest.mark.slow
 def test_janus_vs_vanilla_top1_agreement(small_vit):
     """Accuracy sanity: moderate merging keeps most top-1 decisions."""
     cfg, params, _ = small_vit

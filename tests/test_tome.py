@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import tome
 from repro.kernels import ops
@@ -16,6 +16,7 @@ def _xs(b, n, d, seed=0):
     return x, metric
 
 
+@pytest.mark.slow
 @given(n=st.integers(6, 80), r_frac=st.floats(0.1, 0.8))
 @settings(max_examples=20, deadline=None)
 def test_merge_conserves_token_mass(n, r_frac):

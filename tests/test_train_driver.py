@@ -3,8 +3,7 @@ import numpy as np
 import pytest
 
 from repro.launch import train
-
-
+@pytest.mark.slow
 def test_train_and_resume(tmp_path):
     ckpt = str(tmp_path / "ck")
     p1 = train.main(["--arch", "vit-b16", "--steps", "6",
