@@ -1,0 +1,22 @@
+# Janus reproduction — developer/CI entry points.
+#
+#   make test         fast tier (pytest -m "not slow"; the CI gate)
+#   make test-all     full tier-1 suite
+#   make bench-planner  per-decision planner bench -> BENCH_planner.json
+#   make ci           what .github/workflows/ci.yml runs
+
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test test-all bench-planner ci
+
+test:
+	python -m pytest -x -q -m "not slow"
+
+test-all:
+	python -m pytest -x -q
+
+bench-planner:
+	python benchmarks/planner_bench.py --out BENCH_planner.json
+
+ci: test bench-planner

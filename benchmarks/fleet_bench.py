@@ -23,7 +23,8 @@ from repro.serving import fleet  # noqa: E402
 
 
 def bench_cell(profile, n_streams: int, network: str, mobility: str,
-               frames: int, sla_s: float, capacity: int, seed: int) -> dict:
+               frames: int, sla_s: float, capacity: int, seed: int,
+               planner: str = "tables") -> dict:
     streams = [
         fleet.StreamSpec(
             trace=bandwidth.synthetic_trace(network, mobility, steps=frames,
@@ -34,13 +35,15 @@ def bench_cell(profile, n_streams: int, network: str, mobility: str,
     cloud = dataclasses.replace(fleet.default_cloud_config(n_streams),
                                 capacity=capacity)
     # deterministic artifact: don't bill wall-clock scheduler time
-    cfg = engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+    cfg = engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False,
+                              planner=planner)
     rt = fleet.FleetRuntime(profile, cfg, streams, cloud=cloud)
     t0 = time.perf_counter()
     fs = rt.run()
     wall_s = time.perf_counter() - t0
     return {
         "streams": n_streams,
+        "planner": planner,
         "network": network,
         "mobility": mobility,
         "frames_per_stream": frames,
@@ -68,6 +71,9 @@ def main(argv=None):
     ap.add_argument("--sla-ms", type=float, default=300.0)
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
+                    help="Algorithm-1 implementation (legacy = reference loop, "
+                         "for before/after wall-clock comparison)")
     ap.add_argument("--out", default="fleet_bench.json")
     args = ap.parse_args(argv)
 
@@ -76,7 +82,8 @@ def main(argv=None):
     for network in args.networks:
         for n in args.streams:
             row = bench_cell(profile, n, network, args.mobility, args.frames,
-                             args.sla_ms / 1e3, args.capacity, args.seed)
+                             args.sla_ms / 1e3, args.capacity, args.seed,
+                             planner=args.planner)
             rows.append(row)
             print(f"{network:5s} N={n:4d} viol={row['violation_ratio']:.3f} "
                   f"p50={row['p50_latency_ms']:7.1f}ms "
@@ -90,7 +97,7 @@ def main(argv=None):
         "benchmark": "fleet_bench",
         "config": {"mobility": args.mobility, "frames": args.frames,
                    "sla_ms": args.sla_ms, "capacity": args.capacity,
-                   "seed": args.seed},
+                   "seed": args.seed, "planner": args.planner},
         "rows": rows,
     }
     with open(args.out, "w") as f:

@@ -1,0 +1,156 @@
+"""Per-decision planner benchmark: legacy Algorithm-1 loop vs vectorized
+tables (``repro.core.planner``), plus a fleet-simulation wall-clock cell.
+
+Emits ``BENCH_planner.json`` so the perf trajectory of the decision hot path
+is tracked across PRs. The headline metric is per-decision wall time on the
+ViT-L@384 profile (the paper's deployment), measured in the worst case for
+both implementations (unreachable SLA -> full α scan; the legacy loop's
+early-exit best case is reported too). Decision parity is asserted over every
+sampled network state before timing.
+
+  PYTHONPATH=src python benchmarks/planner_bench.py --out BENCH_planner.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+try:  # script (``python benchmarks/planner_bench.py``) vs package (run.py)
+    import common  # noqa: F401  (adds src/ to sys.path)
+except ModuleNotFoundError:
+    from benchmarks import common
+
+from repro.core import bandwidth, engine, planner, scheduler  # noqa: E402
+from repro.serving import fleet  # noqa: E402
+
+
+def _network_states(n: int, seed: int = 0) -> list[tuple[float, float]]:
+    """(bandwidth, rtt) samples spanning blocked -> fibre."""
+    rng = np.random.default_rng(seed)
+    return [(float(10 ** rng.uniform(4, 9)), float(rng.uniform(0.0, 0.08)))
+            for _ in range(n)]
+
+
+def check_parity(profile, states, sla_s: float) -> None:
+    tables = planner.tables_for(profile)
+    for bw, rtt in states:
+        ref = scheduler._reference_schedule(profile, bw, rtt, sla_s)
+        dec = tables.decide(bw, rtt, sla_s)
+        assert (dec.alpha == ref.alpha and dec.split == ref.split
+                and dec.meets_sla == ref.meets_sla
+                and dec.schedule == ref.schedule
+                and abs(dec.predicted_latency_s - ref.predicted_latency_s) < 1e-9), \
+            f"parity violation at bw={bw:.3g} rtt={rtt:.4f}: {dec} != {ref}"
+
+
+def time_per_decision(fn, states, reps: int) -> float:
+    """Mean seconds per decision across the sampled network states."""
+    fn(*states[0])  # warm any caches outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for bw, rtt in states:
+            fn(bw, rtt)
+    return (time.perf_counter() - t0) / (reps * len(states))
+
+
+def bench_decisions(profile, states, sla_s: float, reps: int) -> dict:
+    tables = planner.tables_for(profile)
+    legacy = time_per_decision(
+        lambda bw, rtt: scheduler._reference_schedule(profile, bw, rtt, sla_s),
+        states, reps)
+    vectorized = time_per_decision(
+        lambda bw, rtt: tables.decide(bw, rtt, sla_s), states, reps)
+    return {
+        "sla_s": sla_s,
+        "alpha_grid": len(tables.alpha_grid),
+        "split_candidates": len(tables.candidates),
+        "legacy_us_per_decision": legacy * 1e6,
+        "vectorized_us_per_decision": vectorized * 1e6,
+        "speedup": legacy / vectorized,
+    }
+
+
+def bench_fleet_wall(profile, planner_impl: str, n_streams: int, frames: int,
+                     seed: int = 0) -> float:
+    streams = [
+        fleet.StreamSpec(
+            trace=bandwidth.synthetic_trace("4g", "driving", steps=frames,
+                                            seed=seed + si),
+            n_frames=frames)
+        for si in range(n_streams)
+    ]
+    cfg = engine.EngineConfig(sla_s=0.3, include_scheduler_overhead=False,
+                              planner=planner_impl)
+    rt = fleet.FleetRuntime(profile, cfg, streams)
+    t0 = time.perf_counter()
+    rt.run()
+    return time.perf_counter() - t0
+
+
+def rows(states_n: int = 20, reps: int = 3):
+    """CSV rows for benchmarks/run.py: (name, us_per_call, derived)."""
+    profile = common.paper_profile()
+    states = _network_states(states_n)
+    out = []
+    for sla_s, tag in ((1e-9, "full_scan"), (0.3, "sla300ms")):
+        r = bench_decisions(profile, states, sla_s, reps)
+        out.append((f"planner/legacy/{tag}", r["legacy_us_per_decision"],
+                    round(r["speedup"], 1)))
+        out.append((f"planner/vectorized/{tag}", r["vectorized_us_per_decision"],
+                    round(r["speedup"], 1)))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--states", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--fleet-streams", type=int, default=16)
+    ap.add_argument("--fleet-frames", type=int, default=20)
+    ap.add_argument("--out", default="BENCH_planner.json")
+    args = ap.parse_args(argv)
+
+    profile = common.paper_profile()
+    states = _network_states(args.states)
+    for sla_s in (1e-9, 0.3):
+        check_parity(profile, states, sla_s)
+    print(f"[planner_bench] parity OK over {args.states} network states x 2 SLAs")
+
+    decisions = []
+    for sla_s, tag in ((1e-9, "full_scan"), (0.3, "sla300ms")):
+        r = bench_decisions(profile, states, sla_s, args.reps)
+        r["case"] = tag
+        decisions.append(r)
+        print(f"{tag:10s} legacy={r['legacy_us_per_decision']:8.1f}us "
+              f"vectorized={r['vectorized_us_per_decision']:6.1f}us "
+              f"speedup={r['speedup']:.1f}x")
+
+    fleet_rows = {}
+    for impl in ("legacy", "tables"):
+        wall = bench_fleet_wall(profile, impl, args.fleet_streams,
+                                args.fleet_frames)
+        fleet_rows[impl] = wall
+        print(f"fleet({args.fleet_streams}x{args.fleet_frames}, {impl:6s}) "
+              f"wall={wall:.2f}s")
+
+    artifact = {
+        "benchmark": "planner_bench",
+        "model": "vit-l384",
+        "config": {"states": args.states, "reps": args.reps,
+                   "fleet_streams": args.fleet_streams,
+                   "fleet_frames": args.fleet_frames},
+        "per_decision": decisions,
+        "fleet_wall_s": fleet_rows,
+        "fleet_speedup": fleet_rows["legacy"] / fleet_rows["tables"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[planner_bench] wrote {args.out} "
+          f"(fleet speedup {artifact['fleet_speedup']:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

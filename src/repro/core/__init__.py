@@ -5,9 +5,10 @@ tome       — ToMe bipartite token merging (the pruning mechanism)
 splitter   — §III-B fine-to-coarse split-point generation (Eq. 3)
 profiler   — §III-C lightweight linear latency profiler
 scheduler  — §III-D dynamic scheduler (Algorithm 1)
+planner    — table-driven vectorized Algorithm-1 hot path (per-profile tables)
 bandwidth  — harmonic-mean estimator + dynamic network traces
 compression— §IV-A LZW payload compression
 engine     — §IV Jdevice/Jcloud execution engine + baselines
 """
-from repro.core import (bandwidth, compression, engine, profiler, pruning,
-                        scheduler, splitter, tome)
+from repro.core import (bandwidth, compression, engine, planner, profiler,
+                        pruning, scheduler, splitter, tome)

@@ -9,12 +9,25 @@ Simulates the two-tier deployment end-to-end over a network trace:
               -> transfer at the *actual* trace bandwidth
               -> cloud partition runs layers [s, N) + head
 
+Decision + accounting hot path is table-driven: every engine for a given
+``ModelProfile`` shares one precomputed ``planner.PlannerTables`` (α grid,
+schedules, token-count matrix, latency prefix sums), so the per-frame
+scheduler call is vectorized array math and ``account_breakdown`` is two
+numpy reductions instead of pure-Python per-layer sums. The fixed baseline
+schedule/counts (Device/Cloud/Mixed policies) are derived once per engine,
+not per frame.
+
 The *math* path (``execute=True``) really runs both partitions — split
 inference is verified elsewhere to equal the monolithic forward — while the
 *latency* path accounts device/cloud compute via the fitted linear profilers
 (exactly the quantities the paper's scheduler reasons about) plus the measured
 payload size over the trace bandwidth. ``execute=False`` skips the math for
 long trace sweeps (benchmarks) and uses the schedule-derived payload size.
+Partition programs are ``jax.jit``-compiled once per (schedule, split, batch)
+geometry and cached in a ``CompiledPlanCache`` — repeat frames with the same
+decision reuse the compiled executable instead of retracing, and the fleet
+runtime batches same-geometry cloud partitions from a micro-batch into one
+stacked forward (``run_cloud_batch``).
 
 Baselines (§V-B): Device-Only / Cloud-Only / Mixed (NeuroSurgeon degenerates to
 Mixed for ViTs), each with ToMe's maximum fixed pruning level.
@@ -28,7 +41,8 @@ stamp + SLA check; caller observes the true bandwidth) is factored out of
 ``run_trace`` so the single-stream loop here and the multi-stream fleet
 runtime (``repro.serving.fleet``) share one code path; the fleet additionally
 needs ``account_breakdown``'s device/comm/cloud phase split to place cloud
-work on a shared, finite tier.
+work on a shared, finite tier, and passes ``defer_cloud=True`` so pending
+cloud partitions execute batched at micro-batch dispatch time.
 """
 from __future__ import annotations
 
@@ -39,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression, pruning, scheduler as sched_lib
+from repro.core import compression, planner, pruning, scheduler as sched_lib
 from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
 from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import Decision, ModelProfile
@@ -55,6 +69,7 @@ class EngineConfig:
     execute: bool = False
     baseline_fixed_r: int = 23  # ToMe max fixed pruning (ViT-L@384; §V-B)
     include_scheduler_overhead: bool = True  # bill Algorithm-1 wall time
+    planner: str = "tables"  # "tables" (vectorized) | "legacy" (reference loop)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +98,22 @@ class FrameResult:
     bandwidth_bps: float
     queue_s: float = 0.0  # extra delay beyond the standalone frame latency
     # (shared-cloud queueing + batch inflation; 0 for the single-stream engine)
+    logits: Any = None    # real-math output when execute=True (else None)
+
+
+@dataclasses.dataclass
+class ExecPlan:
+    """Pending real-math execution state for one frame (execute=True).
+
+    The device partition runs at plan time; ``x``/``sizes`` hold the
+    post-wire activation entering the cloud partition. ``logits`` is filled
+    either inline (single-stream / device-only) or by ``run_cloud_batch``
+    when the fleet dispatches the frame's micro-batch."""
+    schedule: tuple[int, ...]   # exec-geometry merge schedule
+    split: int                  # exec-geometry split (0..n_exec+1)
+    x: Any = None
+    sizes: Any = None
+    logits: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +125,7 @@ class FrameStep:
     payload_bytes: float
     bandwidth_bps: float
     accuracy: float
+    exec_plan: ExecPlan | None = None
 
 
 @dataclasses.dataclass
@@ -171,6 +203,87 @@ def split_inference(params: dict, cfg: vit_lib.ViTConfig, images: jax.Array,
     return logits, payload
 
 
+class CompiledPlanCache:
+    """``jax.jit`` executables for device/cloud partition programs, keyed by
+    (partition, model config, schedule, split, input geometry).
+
+    Without this every executed frame rebuilds and retraces the unrolled
+    partition program even when the scheduler re-picks the same (α, split).
+    ``hits``/``misses`` count cache lookups; ``traces`` counts actual jax
+    traces (the wrapped fn bumps it only while tracing), so tests can assert
+    "second frame with the same geometry does not retrace".
+    """
+
+    def __init__(self):
+        self._fns: dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    def _get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    @staticmethod
+    def _shape_key(arr) -> tuple:
+        return (tuple(arr.shape), str(arr.dtype))
+
+    def device_fn(self, cfg: vit_lib.ViTConfig, schedule: tuple[int, ...],
+                  split: int, images) -> Callable:
+        key = ("device", cfg, schedule, split, self._shape_key(images))
+
+        def build():
+            def traced(params, images):
+                self.traces += 1
+                return device_forward(params, cfg, images, schedule, split)
+            return jax.jit(traced)
+
+        return self._get(key, build)
+
+    def cloud_fn(self, cfg: vit_lib.ViTConfig, schedule: tuple[int, ...],
+                 split: int, x) -> Callable:
+        key = ("cloud", cfg, schedule, split, self._shape_key(x))
+
+        def build():
+            def traced(params, x, sizes):
+                self.traces += 1
+                return cloud_forward(params, cfg, x, sizes, schedule, split)
+            return jax.jit(traced)
+
+        return self._get(key, build)
+
+
+def run_cloud_batch(cache: CompiledPlanCache, cfg: vit_lib.ViTConfig,
+                    params: dict, plans: Sequence[ExecPlan]) -> None:
+    """Execute pending cloud partitions, batching same-geometry plans into one
+    stacked forward (micro-batched fleet items usually share the decision, so
+    this turns B serial forwards into one [B·b, tokens, d] call). Fills each
+    plan's ``logits`` in place."""
+    n = cfg.n_layers
+    groups: dict[tuple, list[ExecPlan]] = {}
+    for plan in plans:
+        if plan is None or plan.logits is not None:
+            continue
+        s = n if plan.split == n + 1 else plan.split
+        key = (plan.schedule, s, tuple(plan.x.shape[1:]), str(plan.x.dtype))
+        groups.setdefault(key, []).append(plan)
+    for (schedule, s, _, _), members in groups.items():
+        x = jnp.concatenate([m.x for m in members], axis=0)
+        sizes = jnp.concatenate([m.sizes for m in members], axis=0)
+        fn = cache.cloud_fn(cfg, schedule, s, x)
+        logits = fn(params, x, sizes)
+        off = 0
+        for m in members:
+            b = m.x.shape[0]
+            m.logits = logits[off:off + b]
+            off += b
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -180,31 +293,55 @@ class JanusEngine:
     def __init__(self, profile: ModelProfile, engine_cfg: EngineConfig,
                  acc_model: AccuracyModel | None = None,
                  model_cfg: vit_lib.ViTConfig | None = None,
-                 params: dict | None = None):
+                 params: dict | None = None,
+                 plan_cache: CompiledPlanCache | None = None):
         self.profile = profile
         self.cfg = engine_cfg
         self.acc = acc_model or AccuracyModel()
         self.model_cfg = model_cfg
         self.params = params
         self._estimator = HarmonicMeanEstimator()
+        # shared vectorized planner state (one tables instance per profile
+        # value — fleet engines sharing a profile share the tables)
+        self.tables = planner.tables_for(profile, t=engine_cfg.t, k=engine_cfg.k)
+        self.plan_cache = plan_cache or CompiledPlanCache()
+        # fixed baseline schedule/counts: derived once, not per frame
+        self._fixed_schedule = tuple(pruning.clamp_schedule(
+            pruning.fixed_schedule(engine_cfg.baseline_fixed_r, profile.n_layers),
+            profile.x0))
+        self._fixed_counts = np.asarray(
+            pruning.token_counts(profile.x0, self._fixed_schedule), dtype=np.int64)
+        self._counts_memo: dict[tuple[int, ...], np.ndarray] = {
+            self._fixed_schedule: self._fixed_counts}
 
     # -- latency accounting -------------------------------------------------
+    def _counts_for(self, schedule: tuple[int, ...]) -> np.ndarray:
+        """Token counts for a decision's schedule (memoized — Algorithm 1
+        revisits a handful of schedules across a trace)."""
+        counts = self._counts_memo.get(schedule)
+        if counts is None:
+            counts = self._counts_memo[schedule] = np.asarray(
+                pruning.token_counts(self.profile.x0, schedule), dtype=np.int64)
+        return counts
+
     def account_breakdown(self, counts: Sequence[int], split: int,
                           payload_bytes: float, bandwidth_bps: float,
                           rtt_s: float) -> LatencyBreakdown:
-        """Phase-separated latency for one frame at the given split."""
+        """Phase-separated latency for one frame at the given split
+        (vectorized over layers via the linear profilers)."""
         p = self.profile
         n = p.n_layers
+        counts = np.asarray(counts, dtype=np.float64)
         if split == 0:
             comm = p.raw_input_bytes * 8 / bandwidth_bps + rtt_s
-            cloud = p.cloud_embed_s + sum(p.cloud.predict(counts[l]) for l in range(n)) + p.head_s
+            cloud = p.cloud_embed_s + float(p.cloud.predict(counts[:n]).sum()) + p.head_s
             return LatencyBreakdown(0.0, comm, cloud)
         if split == n + 1:
-            dev = p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(n)) + p.head_s
+            dev = p.device_embed_s + float(p.device.predict(counts[:n]).sum()) + p.head_s
             return LatencyBreakdown(dev, 0.0, 0.0)
-        dev = p.device_embed_s + sum(p.device.predict(counts[l]) for l in range(split))
+        dev = p.device_embed_s + float(p.device.predict(counts[:split]).sum())
         comm = payload_bytes * 8 / bandwidth_bps + rtt_s
-        cloud = sum(p.cloud.predict(counts[l]) for l in range(split, n)) + p.head_s
+        cloud = float(p.cloud.predict(counts[split:n]).sum()) + p.head_s
         return LatencyBreakdown(dev, comm, cloud)
 
     def _account(self, counts: Sequence[int], split: int, payload_bytes: float,
@@ -215,16 +352,17 @@ class JanusEngine:
     def _payload_bytes(self, counts: Sequence[int], split: int) -> float:
         if split in (0, self.profile.n_layers + 1):
             return 0.0
-        return counts[split] * self.profile.token_bytes
+        return float(counts[split]) * self.profile.token_bytes
 
     def _decide(self, policy: str, bandwidth_est: float, rtt_s: float) -> Decision:
         p, c = self.profile, self.cfg
-        n, x0 = p.n_layers, p.x0
+        n = p.n_layers
         if policy == "janus":
-            return sched_lib.schedule(p, bandwidth_est, rtt_s, c.sla_s, t=c.t, k=c.k)
-        fixed = tuple(pruning.clamp_schedule(
-            pruning.fixed_schedule(c.baseline_fixed_r, n), x0))
-        counts = pruning.token_counts(x0, fixed)
+            if c.planner == "legacy":
+                return sched_lib._reference_schedule(p, bandwidth_est, rtt_s,
+                                                     c.sla_s, t=c.t, k=c.k)
+            return self.tables.decide(bandwidth_est, rtt_s, c.sla_s)
+        fixed, counts = self._fixed_schedule, self._fixed_counts
         if policy == "device":
             return Decision(0.0, n + 1, self._account(counts, n + 1, 0, bandwidth_est, rtt_s),
                             True, fixed)
@@ -238,43 +376,72 @@ class JanusEngine:
             return Decision(0.0, s, min(lat_d, lat_c), True, fixed)
         raise ValueError(policy)
 
+    # -- real-math execution (compiled-plan cache) ---------------------------
+    def _execute_device(self, dec: Decision, images: jax.Array) -> tuple[ExecPlan, float | None]:
+        """Run the device partition (compiled) and encode the wire payload.
+        The timing plane may model a bigger ViT than the executed one —
+        (alpha, split) is remapped onto the executed geometry. Returns the
+        pending ExecPlan and the measured payload size (None = no transfer)."""
+        n_exec = self.model_cfg.n_layers
+        sched_exec = tuple(pruning.make_schedule(
+            self.profile.schedule_kind, dec.alpha, n_exec,
+            self.model_cfg.num_tokens))
+        n_prof = self.profile.n_layers
+        if dec.split >= n_prof + 1:
+            split_exec = n_exec + 1
+        else:
+            split_exec = min(round(dec.split * n_exec / n_prof), n_exec)
+        s = n_exec if split_exec == n_exec + 1 else split_exec
+        dev_fn = self.plan_cache.device_fn(self.model_cfg, sched_exec, s, images)
+        x, sizes = dev_fn(self.params, images)
+        payload_bytes = None
+        if split_exec not in (0, n_exec + 1):
+            payload = compression.activation_payload(
+                x, quantize=self.cfg.quantize_payload)
+            x = jnp.asarray(compression.decode_activation(payload),
+                            dtype=self.model_cfg.dtype)
+            payload_bytes = payload.nbytes
+        return ExecPlan(sched_exec, split_exec, x=x, sizes=sizes), payload_bytes
+
+    def finish_execution(self, plan: ExecPlan) -> None:
+        """Run a pending cloud partition inline (single-stream path; the fleet
+        batches same-geometry plans via ``run_cloud_batch`` instead)."""
+        if plan.logits is not None:
+            return
+        run_cloud_batch(self.plan_cache, self.model_cfg, self.params, [plan])
+
     # -- per-frame step (shared by single-stream and fleet paths) -------------
     def plan_frame(self, frame_idx: int, trace: NetworkTrace, policy: str,
                    estimator: HarmonicMeanEstimator,
-                   images: jax.Array | None = None) -> FrameStep:
+                   images: jax.Array | None = None,
+                   defer_cloud: bool = False) -> FrameStep:
         """``decide -> account`` for one frame. Pure with respect to engine
         state: the caller owns the estimator and must ``observe`` the returned
         ``bandwidth_bps`` after the frame (the fleet keeps one estimator per
-        stream)."""
+        stream). With ``defer_cloud=True`` an executed frame's cloud partition
+        is left pending in ``step.exec_plan`` for batched dispatch."""
         b_est = estimator.estimate()
         dec = self._decide(policy, b_est, trace.rtt_s)
-        counts = pruning.token_counts(self.profile.x0, dec.schedule)
+        counts = self._counts_for(dec.schedule)
         b_true = trace.at(frame_idx)
 
         payload_bytes = self._payload_bytes(counts, dec.split)
+        exec_plan = None
         if self.cfg.execute and self.params is not None and images is not None:
-            # the timing plane may model a bigger ViT than the executed
-            # one — remap (alpha, split) onto the executed geometry
+            exec_plan, measured = self._execute_device(dec, images)
+            if measured is not None:
+                payload_bytes = measured
             n_exec = self.model_cfg.n_layers
-            sched_exec = pruning.make_schedule(
-                self.profile.schedule_kind, dec.alpha, n_exec,
-                self.model_cfg.num_tokens)
-            n_prof = self.profile.n_layers
-            if dec.split >= n_prof + 1:
-                split_exec = n_exec + 1
-            else:
-                split_exec = min(round(dec.split * n_exec / n_prof), n_exec)
-            _, payload = split_inference(self.params, self.model_cfg, images,
-                                         sched_exec, split_exec,
-                                         quantize=self.cfg.quantize_payload)
-            if payload is not None:
-                payload_bytes = payload.nbytes
+            if not defer_cloud or exec_plan.split == n_exec + 1:
+                # device-only frames never enter the shared cloud tier, so
+                # their (head-only) cloud program always completes inline
+                self.finish_execution(exec_plan)
 
         bd = self.account_breakdown(counts, dec.split, payload_bytes, b_true,
                                     trace.rtt_s)
         acc = self.acc.accuracy(self.profile.x0, dec.schedule)
         return FrameStep(decision=dec, breakdown=bd, payload_bytes=payload_bytes,
-                         bandwidth_bps=b_true, accuracy=acc)
+                         bandwidth_bps=b_true, accuracy=acc, exec_plan=exec_plan)
 
     def overhead_s(self, step: FrameStep) -> float:
         return step.decision.scheduler_overhead_s \
@@ -284,12 +451,13 @@ class JanusEngine:
         """Stamp a planned frame into a result; ``queue_s`` is any extra delay
         the shared cloud tier added on top of the standalone latency."""
         lat = step.breakdown.total_s + self.overhead_s(step) + queue_s
+        logits = step.exec_plan.logits if step.exec_plan is not None else None
         return FrameResult(
             latency_s=lat, violated=lat > self.cfg.sla_s,
             deviation=max(0.0, (lat - self.cfg.sla_s) / self.cfg.sla_s),
             alpha=step.decision.alpha, split=step.decision.split,
             accuracy=step.accuracy, payload_bytes=step.payload_bytes,
-            bandwidth_bps=step.bandwidth_bps, queue_s=queue_s)
+            bandwidth_bps=step.bandwidth_bps, queue_s=queue_s, logits=logits)
 
     # -- main loop ------------------------------------------------------------
     def run_trace(self, trace: NetworkTrace, n_frames: int, policy: str = "janus",

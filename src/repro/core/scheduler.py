@@ -5,8 +5,17 @@ the per-layer token counts, predicts device/cloud per-layer latency with the
 linear profilers and the transfer latency from the estimated bandwidth, picks
 the split point minimizing E2E latency over the fine-to-coarse candidate set,
 and returns the first configuration meeting the SLA — or, if none does, the
-(α_max, best-split) fallback. O((α_max/t)·N); the measured overhead is reported
-by benchmarks/table2_overhead.py.
+(α_max, best-split) fallback.
+
+The public entry points (``schedule`` / ``sweep_alpha``) are backed by the
+table-driven vectorized planner (``repro.core.planner``): all model-dependent
+state is precomputed once per profile, so a per-frame decision is O(A·S)
+array math instead of the O(A·S·N) pure-Python scan. The original loop is
+kept verbatim as ``_reference_schedule`` — the parity oracle for
+``tests/test_planner.py`` and the baseline for
+``benchmarks/planner_bench.py`` (which tracks the measured per-decision
+overhead; the paper's Table-2-style claim is that this overhead is negligible
+per frame).
 """
 from __future__ import annotations
 
@@ -61,10 +70,12 @@ def _e2e_latency(profile: ModelProfile, counts: Sequence[int], split: int,
     return dev + comm + cloud
 
 
-def schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: float, sla_s: float,
-             *, t: float = 0.01, k: int = 5,
-             alpha_grid: Sequence[float] | None = None) -> Decision:
-    """Algorithm 1. Returns the chosen (α, split)."""
+def _reference_schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: float,
+                        sla_s: float, *, t: float = 0.01, k: int = 5,
+                        alpha_grid: Sequence[float] | None = None) -> Decision:
+    """The original per-frame Algorithm-1 loop, kept as the parity oracle for
+    the vectorized planner (tests/test_planner.py, benchmarks/planner_bench.py).
+    O((α_max/t)·S·N) pure Python per call — do not use on hot paths."""
     t0 = time.perf_counter()
     n, x0 = profile.n_layers, profile.x0
     candidates = splitter.candidate_split_points(n, k)
@@ -89,19 +100,26 @@ def schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: float, sla_s: f
     return Decision(alpha, s, lat, False, sched, time.perf_counter() - t0)
 
 
+def schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: float, sla_s: float,
+             *, t: float = 0.01, k: int = 5,
+             alpha_grid: Sequence[float] | None = None) -> Decision:
+    """Algorithm 1. Returns the chosen (α, split).
+
+    Table-driven: the first call for a given profile builds the planner
+    tables (``planner.tables_for`` LRU caches them by profile value); every
+    subsequent decision is vectorized array math."""
+    from repro.core import planner
+    return planner.tables_for(profile, t=t, k=k, alpha_grid=alpha_grid) \
+        .decide(bandwidth_bps, rtt_s, sla_s)
+
+
 def sweep_alpha(profile: ModelProfile, bandwidth_bps: float, rtt_s: float,
-                *, t: float = 0.01, k: int = 5) -> list[Decision]:
-    """Full (α → best split) map — used by sensitivity benchmarks (Fig 9)."""
-    n, x0 = profile.n_layers, profile.x0
-    candidates = splitter.candidate_split_points(n, k)
-    amax = pruning.alpha_max(n, x0, t)
-    out = []
-    steps = int(round(amax / t))
-    for i in range(steps + 1):
-        alpha = round(i * t, 10)
-        sched = pruning.make_schedule(profile.schedule_kind, alpha, n, x0)
-        counts = pruning.token_counts(x0, sched)
-        lat, s = min((_e2e_latency(profile, counts, s, bandwidth_bps, rtt_s), s)
-                     for s in candidates)
-        out.append(Decision(alpha, s, lat, False, tuple(sched)))
-    return out
+                sla_s: float = float("inf"), *, t: float = 0.01,
+                k: int = 5) -> list[Decision]:
+    """Full (α → best split) map — used by sensitivity benchmarks (Fig 9).
+
+    Shares the planner tables with ``schedule`` (no duplicated schedule/count
+    derivation), and ``meets_sla`` is evaluated against ``sla_s`` instead of
+    the old hardcoded ``False`` (the default ∞ marks every point feasible)."""
+    from repro.core import planner
+    return planner.tables_for(profile, t=t, k=k).sweep(bandwidth_bps, rtt_s, sla_s)

@@ -23,6 +23,12 @@ Fleet knobs: ``--capacity`` (concurrent cloud batch executors), ``--max-batch``
 / ``--batch-wait-ms`` (micro-batch window; default max-batch min(8, N) so
 ``--streams 1`` reproduces the single-stream engine exactly), ``--period-ms``
 (min frame spacing per stream; 0 = closed loop).
+
+Scheduling decisions run on the vectorized planner tables
+(``repro.core.planner``; ``--planner legacy`` selects the reference
+Algorithm-1 loop for comparison), and ``--streams N --execute`` runs the real
+cloud-partition math batched per micro-batch through the fleet-shared
+compiled-plan cache.
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import bandwidth, engine, profiler, pruning, scheduler
+from repro.core import bandwidth, engine, planner, profiler, pruning, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
 from repro.serving import fleet as fleet_lib
@@ -115,11 +121,23 @@ def main(argv=None):
                     help="fleet mode: micro-batch deadline window")
     ap.add_argument("--period-ms", type=float, default=0.0,
                     help="fleet mode: min frame spacing per stream")
+    ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
+                    help="Algorithm-1 implementation: vectorized planner "
+                         "tables (default) or the reference pure-Python loop")
     args = ap.parse_args(argv)
 
     paper = get_arch("janus-vit-l384")
     cfg_timing = paper.config          # timing plane: the paper's ViT-L@384
     profile = make_profile(cfg_timing)
+    tables = planner.tables_for(profile)
+    if args.planner == "legacy":  # measure the implementation actually used
+        dec = scheduler._reference_schedule(profile, 10e6, 0.02,
+                                            args.sla_ms / 1e3)
+    else:
+        dec = tables.decide(10e6, 0.02, args.sla_ms / 1e3)  # representative state
+    print(f"[planner] {args.planner}: alpha_grid={len(tables.alpha_grid)} "
+          f"splits={len(tables.candidates)} "
+          f"decide={dec.scheduler_overhead_s*1e6:.0f}us/frame")
 
     params = model_cfg = images = None
     if args.execute:
@@ -128,7 +146,8 @@ def main(argv=None):
         images = jax.random.normal(jax.random.key(1),
                                    (1, model_cfg.img_res, model_cfg.img_res, 3))
 
-    eng_cfg = engine.EngineConfig(sla_s=args.sla_ms / 1e3, execute=args.execute)
+    eng_cfg = engine.EngineConfig(sla_s=args.sla_ms / 1e3, execute=args.execute,
+                                  planner=args.planner)
     if args.streams > 0:
         run_fleet(args, profile, eng_cfg, model_cfg=model_cfg, params=params,
                   images=images)

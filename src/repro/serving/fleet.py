@@ -37,6 +37,12 @@ Simulation model (discrete-event, one heap):
 Device-only decisions (split = N+1, the blocked-network failover) never touch
 the cloud tier, so a saturated cloud pushes Janus streams toward local
 execution exactly as the paper's scheduler would under a slow network.
+
+With ``execute=True`` the real model math follows the same topology: the
+device partition runs (compiled, via the fleet-shared ``CompiledPlanCache``)
+at plan time, and the pending cloud partitions of a dispatched micro-batch
+execute as one stacked batched forward per geometry group
+(``engine.run_cloud_batch``) instead of serially per frame.
 """
 from __future__ import annotations
 
@@ -48,7 +54,9 @@ import itertools
 import numpy as np
 
 from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
-from repro.core.engine import EngineConfig, FrameResult, FrameStep, JanusEngine, RunStats
+from repro.core.engine import (CompiledPlanCache, EngineConfig, FrameResult,
+                               FrameStep, JanusEngine, RunStats,
+                               run_cloud_batch)
 from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import ModelProfile
 from repro.serving.batcher import MicroBatcher, Request
@@ -165,16 +173,24 @@ class FleetRuntime:
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
         acc = acc_model or AccuracyModel()
-        # per-stream scheduler state: a dedicated engine (shared profile/model)
-        # so per-stream SLAs drive per-stream decisions
+        self.model_cfg = model_cfg
+        self.params = params
+        # one compiled-plan cache for the whole fleet: streams share the model,
+        # so same-geometry partition programs compile once fleet-wide
+        self.plan_cache = CompiledPlanCache()
+        # per-stream scheduler state: a dedicated engine (shared profile/model/
+        # planner tables/plan cache) so per-stream SLAs drive per-stream
+        # decisions without re-deriving any model-dependent state
         self.engines = [
             JanusEngine(profile,
                         dataclasses.replace(
                             base_cfg,
                             sla_s=base_cfg.sla_s if s.sla_s is None else s.sla_s),
-                        acc_model=acc, model_cfg=model_cfg, params=params)
+                        acc_model=acc, model_cfg=model_cfg, params=params,
+                        plan_cache=self.plan_cache)
             for s in streams
         ]
+        self._execute = base_cfg.execute and params is not None
 
     def run(self, images=None) -> FleetStats:
         streams, cloud = self.streams, self.cloud
@@ -196,7 +212,7 @@ class FleetRuntime:
         def start_frame(si: int, fi: int, t0: float) -> None:
             eng, spec = self.engines[si], streams[si]
             step = eng.plan_frame(fi, spec.trace, spec.policy, estimators[si],
-                                  images=images)
+                                  images=images, defer_cloud=True)
             estimators[si].observe(step.bandwidth_bps)
             bd = step.breakdown
             local_done = t0 + eng.overhead_s(step) + bd.device_s + bd.comm_s
@@ -225,6 +241,12 @@ class FleetRuntime:
 
         def dispatch(batch: list[Request], now: float) -> None:
             members = [items.pop(r.rid) for r in batch]
+            if self._execute:
+                # run the real cloud partitions for the whole micro-batch:
+                # same-geometry frames execute as one stacked forward instead
+                # of B serial ones (the compiled fn is cached per geometry)
+                run_cloud_batch(self.plan_cache, self.model_cfg, self.params,
+                                [m.step.exec_plan for m in members])
             service = max(m.step.breakdown.cloud_s for m in members) \
                 * (1.0 + cloud.batch_growth * (len(batch) - 1))
             if len(executors) < cloud.capacity:

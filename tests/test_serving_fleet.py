@@ -1,11 +1,14 @@
 """Regression tests for the batcher timing fixes + the multi-stream fleet
 runtime (stream isolation, cloud saturation, N=1 equivalence with the
-single-stream engine)."""
+single-stream engine, batched real-math cloud execution)."""
+import jax
 import numpy as np
 import pytest
 from conftest import small_model_profile as _profile
 
-from repro.core import bandwidth, engine
+from repro.core import bandwidth, engine, pruning
+from repro.models import param as param_lib
+from repro.models import vit as vit_lib
 from repro.serving import fleet
 from repro.serving.batcher import ContinuousBatcher, MicroBatcher, Request
 
@@ -200,6 +203,90 @@ def test_fleet_microbatching_amortizes_cloud_work():
     batched, unbatched = run(8), run(1)
     assert batched.avg_batch_size > 1.0
     assert batched.cloud_busy_s < unbatched.cloud_busy_s
+
+
+# ------------------------------------------- fleet real-math (execute) path
+
+def _exec_setup():
+    cfg = vit_lib.ViTConfig(img_res=32, patch=8, n_layers=4, d_model=32,
+                            n_heads=2, d_ff=64, n_classes=8)
+    params = param_lib.init_params(vit_lib.specs(cfg), jax.random.key(0))
+    images = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+    eng_cfg = engine.EngineConfig(sla_s=0.5, execute=True,
+                                  include_scheduler_overhead=False)
+    return cfg, params, images, eng_cfg
+
+
+def _exec_fleet(n_streams, frames, max_batch, capacity=4):
+    cfg, params, images, eng_cfg = _exec_setup()
+    prof = _profile()
+    traces = [bandwidth.NetworkTrace(np.full(frames, 80e6), 0.002, f"s{i}")
+              for i in range(n_streams)]
+    rt = fleet.FleetRuntime(
+        prof, eng_cfg, [fleet.StreamSpec(t, frames) for t in traces],
+        cloud=fleet.CloudTierConfig(capacity=capacity, max_batch=max_batch,
+                                    max_wait_s=0.02),
+        model_cfg=cfg, params=params)
+    return rt, rt.run(images=images), images
+
+
+def test_fleet_batched_execute_logits_equal_per_item():
+    """Micro-batched cloud partitions (one stacked forward per geometry
+    group) produce the same logits as per-item execution (max_batch=1) and
+    as the reference split_inference round trip."""
+    n_streams, frames = 4, 3
+    rt_b, fs_batched, images = _exec_fleet(n_streams, frames, max_batch=n_streams)
+    rt_u, fs_unbatched, _ = _exec_fleet(n_streams, frames, max_batch=1)
+    assert fs_batched.avg_batch_size > 1.0, "steady streams must co-batch"
+
+    cfg, prof = rt_b.model_cfg, rt_b.engines[0].profile
+    n_exec, n_prof = cfg.n_layers, prof.n_layers
+    for st_b, st_u in zip(fs_batched.per_stream, fs_unbatched.per_stream):
+        for fb, fu in zip(st_b.frames, st_u.frames):
+            assert fb.logits is not None and fu.logits is not None
+            assert (fb.alpha, fb.split) == (fu.alpha, fu.split)
+            np.testing.assert_allclose(np.asarray(fb.logits),
+                                       np.asarray(fu.logits),
+                                       atol=1e-5, rtol=1e-5)
+            sched = tuple(pruning.make_schedule(prof.schedule_kind, fb.alpha,
+                                                n_exec, cfg.num_tokens))
+            split_exec = n_exec + 1 if fb.split >= n_prof + 1 else \
+                min(round(fb.split * n_exec / n_prof), n_exec)
+            ref, _ = engine.split_inference(rt_b.params, cfg, images, sched,
+                                            split_exec, quantize=True)
+            np.testing.assert_allclose(np.asarray(fb.logits), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_fleet_shares_one_plan_cache_across_streams():
+    """Same-geometry streams compile each partition program once fleet-wide:
+    the shared cache traces exactly (device + cloud) once."""
+    rt, fs, _ = _exec_fleet(4, 2, max_batch=4)
+    assert all(e.plan_cache is rt.plan_cache for e in rt.engines)
+    assert rt.plan_cache.traces == 2, \
+        f"expected 1 device + 1 cloud trace, got {rt.plan_cache.traces}"
+    assert rt.plan_cache.hits > 0
+
+
+def test_fleet_n1_execute_matches_run_trace():
+    """--streams 1 --execute reproduces the single-stream engine: same
+    latencies, payloads, and logits."""
+    cfg, params, images, eng_cfg = _exec_setup()
+    prof = _profile()
+    trace = bandwidth.synthetic_trace("wifi", "walking", steps=8, seed=5)
+    st_engine = engine.JanusEngine(prof, eng_cfg, model_cfg=cfg, params=params) \
+        .run_trace(trace, 8, "janus", images=images)
+    fs = fleet.FleetRuntime(prof, eng_cfg, [fleet.StreamSpec(trace, 8)],
+                            cloud=fleet.CloudTierConfig(max_batch=1),
+                            model_cfg=cfg, params=params).run(images=images)
+    st_fleet = fs.per_stream[0]
+    np.testing.assert_allclose([f.latency_s for f in st_fleet.frames],
+                               [f.latency_s for f in st_engine.frames])
+    assert [f.payload_bytes for f in st_fleet.frames] == \
+        [f.payload_bytes for f in st_engine.frames]
+    for ff, fe in zip(st_fleet.frames, st_engine.frames):
+        np.testing.assert_allclose(np.asarray(ff.logits), np.asarray(fe.logits),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_fleet_frames_complete_and_stats_sane():
