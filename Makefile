@@ -1,14 +1,15 @@
 # Janus reproduction — developer/CI entry points.
 #
-#   make test         fast tier (pytest -m "not slow"; the CI gate)
-#   make test-all     full tier-1 suite
+#   make test           fast tier (pytest -m "not slow"; the CI gate)
+#   make test-all       full tier-1 suite
 #   make bench-planner  per-decision planner bench -> BENCH_planner.json
-#   make ci           what .github/workflows/ci.yml runs
+#   make bench-workload workload-scenario sweep smoke -> BENCH_workload.json
+#   make ci             what .github/workflows/ci.yml runs
 
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-all bench-planner ci
+.PHONY: test test-all bench-planner bench-workload ci
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -19,4 +20,7 @@ test-all:
 bench-planner:
 	python benchmarks/planner_bench.py --out BENCH_planner.json
 
-ci: test bench-planner
+bench-workload:
+	python benchmarks/workload_bench.py --smoke --out BENCH_workload.json
+
+ci: test bench-planner bench-workload

@@ -8,6 +8,10 @@ simulation wall time per cell. Emits a JSON perf artifact.
   PYTHONPATH=src python benchmarks/fleet_bench.py \
       --streams 1 4 16 64 128 --networks 4g 5g wifi \
       --frames 30 --out fleet_bench.json
+
+``--trace-csv FILE_OR_DIR`` replays real traces instead of the synthetic
+generator: one CSV shared by every stream, or a directory of ``*.csv``
+assigned round-robin (the ``network`` column then reports the source name).
 """
 from __future__ import annotations
 
@@ -18,20 +22,32 @@ import time
 
 import common  # noqa: F401  (adds src/ to sys.path)
 
-from repro.core import bandwidth, engine  # noqa: E402
-from repro.serving import fleet  # noqa: E402
+from repro.core import engine  # noqa: E402
+from repro.serving import fleet, workload  # noqa: E402
+
+
+def build_streams(profile, n_streams: int, network: str, mobility: str,
+                  frames: int, seed: int, trace_csv: str = "",
+                  trace_rtt_ms: float = 42.2) -> list[fleet.StreamSpec]:
+    """Streams via the workload layer's own closed-loop spec, so this bench
+    sees exactly the traces ``serve.py --streams N`` / ``--workload`` would
+    (same spawned-seed derivation, same CSV file/dir round-robin)."""
+    if trace_csv:
+        net = workload.NetworkConfig(kind="csv", path=trace_csv,
+                                     rtt_ms=trace_rtt_ms)
+    else:
+        net = workload.NetworkConfig(network=network, mobility=mobility)
+    spec = workload.WorkloadSpec(n_streams=n_streams, n_frames=frames,
+                                 seed=seed, network=net)
+    return spec.build_streams(profile)
 
 
 def bench_cell(profile, n_streams: int, network: str, mobility: str,
                frames: int, sla_s: float, capacity: int, seed: int,
-               planner: str = "tables") -> dict:
-    streams = [
-        fleet.StreamSpec(
-            trace=bandwidth.synthetic_trace(network, mobility, steps=frames,
-                                            seed=seed + si),
-            n_frames=frames)
-        for si in range(n_streams)
-    ]
+               planner: str = "tables", trace_csv: str = "",
+               trace_rtt_ms: float = 42.2) -> dict:
+    streams = build_streams(profile, n_streams, network, mobility, frames,
+                            seed, trace_csv, trace_rtt_ms)
     cloud = dataclasses.replace(fleet.default_cloud_config(n_streams),
                                 capacity=capacity)
     # deterministic artifact: don't bill wall-clock scheduler time
@@ -44,7 +60,7 @@ def bench_cell(profile, n_streams: int, network: str, mobility: str,
     return {
         "streams": n_streams,
         "planner": planner,
-        "network": network,
+        "network": f"csv:{trace_csv}" if trace_csv else network,
         "mobility": mobility,
         "frames_per_stream": frames,
         "capacity": capacity,
@@ -74,16 +90,22 @@ def main(argv=None):
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation (legacy = reference loop, "
                          "for before/after wall-clock comparison)")
+    ap.add_argument("--trace-csv", default="",
+                    help="replay real traces: a CSV file (shared) or a "
+                         "directory of *.csv (round-robin per stream)")
+    ap.add_argument("--trace-rtt-ms", type=float, default=42.2)
     ap.add_argument("--out", default="fleet_bench.json")
     args = ap.parse_args(argv)
 
     profile = common.paper_profile()
     rows = []
-    for network in args.networks:
+    networks = ["csv"] if args.trace_csv else args.networks
+    for network in networks:
         for n in args.streams:
             row = bench_cell(profile, n, network, args.mobility, args.frames,
                              args.sla_ms / 1e3, args.capacity, args.seed,
-                             planner=args.planner)
+                             planner=args.planner, trace_csv=args.trace_csv,
+                             trace_rtt_ms=args.trace_rtt_ms)
             rows.append(row)
             print(f"{network:5s} N={n:4d} viol={row['violation_ratio']:.3f} "
                   f"p50={row['p50_latency_ms']:7.1f}ms "

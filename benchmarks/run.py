@@ -7,7 +7,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_tables, planner_bench, roofline_table
+    from benchmarks import (kernel_bench, paper_tables, planner_bench,
+                            roofline_table, workload_bench)
 
     print("name,us_per_call,derived")
     for fn in paper_tables.ALL:
@@ -16,6 +17,8 @@ def main() -> None:
     for name, us, derived in kernel_bench.rows():
         print(f"{name},{us:.2f},{derived}")
     for name, us, derived in planner_bench.rows():
+        print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in workload_bench.rows():
         print(f"{name},{us:.2f},{derived}")
     rl = roofline_table.rows()
     if not rl:

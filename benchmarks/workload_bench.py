@@ -1,0 +1,194 @@
+"""Workload-scenario benchmark: scenario x load sweep over the fleet runtime.
+
+Each scenario is a declarative ``WorkloadSpec`` (``repro.serving.workload``)
+run at several fleet sizes on the paper's ViT-L@384 profile:
+
+  * ``closed-baseline``     — the classic closed-loop fleet (regression anchor)
+  * ``poisson-overload``    — open-loop Poisson arrivals past sustainable rate
+                              with admission control: overload must show up as
+                              a nonzero drop ratio, not unbounded queueing
+  * ``mmpp-burst-static``   — bursty (MMPP) arrivals on a static cloud tier
+  * ``mmpp-burst-autoscale``— the same arrivals with the utilization-driven
+                              autoscaler: capacity rises under the burst and
+                              decays after it (the capacity timeline is in the
+                              artifact), trading capacity-seconds for SLA
+  * ``tiered``              — heterogeneous phone/jetson/laptop device tiers
+
+Rows record drop ratio, violation ratio, p50/p99 latency, queueing delay,
+cloud utilization, capacity peak/final, and capacity-seconds — the static-vs-
+autoscale pair at equal load is the SLA-vs-capacity-seconds cost frontier.
+Emits ``BENCH_workload.json``.
+
+  PYTHONPATH=src python benchmarks/workload_bench.py --out BENCH_workload.json
+  PYTHONPATH=src python benchmarks/workload_bench.py --smoke   # CI, seconds
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+try:  # script (``python benchmarks/workload_bench.py``) vs package (run.py)
+    import common  # noqa: F401  (adds src/ to sys.path)
+except ModuleNotFoundError:
+    from benchmarks import common
+
+from repro.core import engine  # noqa: E402
+from repro.serving import fleet, workload  # noqa: E402
+
+_BURST_ARRIVALS = dict(kind="mmpp", rate_fps=2.0, burst_rate_fps=60.0,
+                       p_burst=0.10, p_calm=0.05, max_inflight=4)
+_AUTOSCALE = dict(min_capacity=1, max_capacity=8, interval_s=0.25,
+                  cooldown_s=0.25, high_util=0.70, low_util=0.25)
+
+
+def scenario_spec(name: str, n_streams: int, frames: int,
+                  seed: int) -> workload.WorkloadSpec:
+    base = dict(n_streams=n_streams, n_frames=frames, seed=seed)
+    wifi = workload.NetworkConfig(network="wifi", mobility="static")
+    if name == "closed-baseline":
+        return workload.WorkloadSpec(**base)
+    if name == "poisson-overload":
+        return workload.WorkloadSpec(
+            **base, network=wifi, capacity=1, max_batch=4,
+            arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=50.0,
+                                            max_inflight=2))
+    if name == "mmpp-burst-static":
+        return workload.WorkloadSpec(
+            **base, network=wifi, capacity=1, max_batch=4,
+            arrivals=workload.ArrivalConfig(**_BURST_ARRIVALS))
+    if name == "mmpp-burst-autoscale":
+        return workload.WorkloadSpec(
+            **base, network=wifi, capacity=1, max_batch=4,
+            arrivals=workload.ArrivalConfig(**_BURST_ARRIVALS),
+            autoscale=fleet.AutoscaleConfig(**_AUTOSCALE))
+    if name == "tiered":
+        return workload.WorkloadSpec(**base,
+                                     tiers=("phone", "jetson", "laptop"))
+    raise ValueError(f"unknown scenario {name!r}")
+
+
+SCENARIOS = ("closed-baseline", "poisson-overload", "mmpp-burst-static",
+             "mmpp-burst-autoscale", "tiered")
+
+
+def bench_cell(profile, scenario: str, n_streams: int, frames: int,
+               sla_s: float, seed: int) -> dict:
+    spec = scenario_spec(scenario, n_streams, frames, seed)
+    cfg = engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+    rt = workload.build_runtime(spec, profile, cfg)
+    t0 = time.perf_counter()
+    fs = rt.run()
+    wall_s = time.perf_counter() - t0
+    row = {
+        "scenario": scenario,
+        "streams": n_streams,
+        "frames_per_stream": frames,
+        "arrivals": spec.arrivals.kind,
+        "tiers": list(spec.tiers),
+        "autoscale": spec.autoscale is not None,
+        "completed_frames": len(fs.all_frames),
+        "drop_ratio": fs.drop_ratio,
+        "violation_ratio": fs.violation_ratio,
+        "p50_latency_ms": fs.p50_latency_s * 1e3,
+        "p99_latency_ms": fs.p99_latency_s * 1e3,
+        "avg_queue_ms": fs.avg_queue_s * 1e3,
+        "cloud_utilization": fs.cloud_utilization,
+        "capacity_initial": fs.capacity,
+        "capacity_peak": fs.peak_capacity,
+        "capacity_final": fs.final_capacity,
+        "capacity_seconds": fs.capacity_seconds,
+        "horizon_s": fs.horizon_s,
+        "sim_wall_s": wall_s,
+    }
+    if spec.autoscale is not None:
+        row["capacity_timeline"] = [[t, c] for t, c in fs.capacity_timeline]
+    return row
+
+
+def frontier(rows: list[dict]) -> list[dict]:
+    """SLA-vs-capacity-seconds pairs: static vs autoscaled at equal load."""
+    by_key = {(r["scenario"], r["streams"]): r for r in rows}
+    out = []
+    for (scenario, n), r in by_key.items():
+        if scenario != "mmpp-burst-autoscale":
+            continue
+        static = by_key.get(("mmpp-burst-static", n))
+        if static is None:
+            continue
+        out.append({
+            "streams": n,
+            "static": {"violation_ratio": static["violation_ratio"],
+                       "drop_ratio": static["drop_ratio"],
+                       "capacity_seconds": static["capacity_seconds"]},
+            "autoscaled": {"violation_ratio": r["violation_ratio"],
+                           "drop_ratio": r["drop_ratio"],
+                           "capacity_seconds": r["capacity_seconds"]},
+        })
+    return out
+
+
+def run_sweep(streams: list[int], frames: int, sla_ms: float, seed: int,
+              scenarios=SCENARIOS) -> list[dict]:
+    profile = common.paper_profile()
+    rows = []
+    for scenario in scenarios:
+        for n in streams:
+            row = bench_cell(profile, scenario, n, frames, sla_ms / 1e3, seed)
+            rows.append(row)
+            print(f"{scenario:22s} N={n:4d} drop={row['drop_ratio']:.3f} "
+                  f"viol={row['violation_ratio']:.3f} "
+                  f"p99={row['p99_latency_ms']:8.1f}ms "
+                  f"util={row['cloud_utilization']:.2f} "
+                  f"cap(peak={row['capacity_peak']} "
+                  f"final={row['capacity_final']} "
+                  f"cap_s={row['capacity_seconds']:7.2f}) "
+                  f"wall={row['sim_wall_s']:.2f}s")
+    return rows
+
+
+def rows():
+    """``benchmarks/run.py`` hook: one CSV row per smoke scenario."""
+    profile = common.paper_profile()
+    out = []
+    for scenario in SCENARIOS:
+        t0 = time.perf_counter()
+        r = bench_cell(profile, scenario, 4, 12, 0.3, seed=0)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append((f"workload/{scenario}",
+                    us,
+                    f"drop={r['drop_ratio']:.2f} viol={r['violation_ratio']:.2f} "
+                    f"cap_peak={r['capacity_peak']}"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, nargs="+", default=[4, 8, 16])
+    ap.add_argument("--frames", type=int, default=60)
+    ap.add_argument("--sla-ms", type=float, default=300.0)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sweep (one fleet size, few frames)")
+    ap.add_argument("--out", default="BENCH_workload.json")
+    args = ap.parse_args(argv)
+
+    streams = [8] if args.smoke else args.streams
+    frames = 40 if args.smoke else args.frames
+    bench_rows = run_sweep(streams, frames, args.sla_ms, args.seed)
+
+    artifact = {
+        "benchmark": "workload_bench",
+        "config": {"streams": streams, "frames": frames,
+                   "sla_ms": args.sla_ms, "seed": args.seed,
+                   "smoke": args.smoke},
+        "rows": bench_rows,
+        "sla_vs_capacity_frontier": frontier(bench_rows),
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[workload_bench] wrote {len(bench_rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

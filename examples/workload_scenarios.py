@@ -1,0 +1,58 @@
+"""Workload-scenario tour: the declarative layer over the fleet runtime.
+
+Four scenarios on the paper's ViT-L@384 timing profile:
+
+  1. closed loop (the classic fleet — regression anchor),
+  2. open-loop Poisson overload with admission control (drops, not queues),
+  3. heterogeneous phone/jetson/laptop device tiers,
+  4. a bursty MMPP fleet with cloud autoscaling (capacity follows load),
+
+then the same autoscale scenario loaded from a JSON ``WorkloadSpec`` via the
+serving CLI's ``--workload`` flag.
+
+    PYTHONPATH=src python examples/workload_scenarios.py
+"""
+import json
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+BASE = ["--frames", "30", "--sla-ms", "300", "--seed", "3"]
+
+print("\n=== 1. closed loop, 8 driving-4G streams ===")
+serve.main(["--streams", "8", "--network", "4g", "--mobility", "driving",
+            *BASE])
+
+print("\n=== 2. open-loop Poisson overload (admission drops) ===")
+serve.main(["--streams", "8", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "poisson", "--rate-fps", "50", "--max-inflight", "2",
+            "--capacity", "1", *BASE])
+
+print("\n=== 3. heterogeneous device tiers ===")
+serve.main(["--streams", "6", "--network", "5g", "--mobility", "walking",
+            "--tiers", "phone", "jetson", "laptop", *BASE])
+
+print("\n=== 4. bursty arrivals + cloud autoscaling ===")
+serve.main(["--streams", "8", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "mmpp", "--rate-fps", "2", "--burst-rate-fps", "60",
+            "--max-inflight", "4", "--capacity", "1",
+            "--autoscale", "--autoscale-max", "8", *BASE])
+
+print("\n=== 5. the same autoscale scenario as a JSON WorkloadSpec ===")
+spec = {
+    "name": "burst-autoscale-demo",
+    "n_streams": 8, "n_frames": 30, "sla_ms": 300.0, "seed": 3,
+    "network": {"network": "wifi", "mobility": "static"},
+    "arrivals": {"kind": "mmpp", "rate_fps": 2.0, "burst_rate_fps": 60.0,
+                 "max_inflight": 4},
+    "capacity": 1,
+    "autoscale": {"min_capacity": 1, "max_capacity": 8},
+}
+with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+    json.dump(spec, f)
+serve.main(["--workload", f.name])
+pathlib.Path(f.name).unlink()

@@ -14,6 +14,8 @@ with mobility-dependent transition rates. Real traces can be loaded with
 from __future__ import annotations
 
 import dataclasses
+import pathlib
+import warnings
 from collections import deque
 
 import numpy as np
@@ -72,8 +74,20 @@ class NetworkTrace:
         return float(self.bps[step % len(self.bps)])
 
     @classmethod
-    def from_csv(cls, path: str, rtt_s: float, name: str = "csv") -> "NetworkTrace":
-        return cls(np.loadtxt(path, delimiter=",", usecols=0), rtt_s, name)
+    def from_csv(cls, path: str, rtt_s: float, name: str | None = None) -> "NetworkTrace":
+        """Load per-step uplink bps from the first column of a CSV file.
+        ``#``-comment lines are skipped; ``ndmin=1`` keeps a single-row file
+        a length-1 trace. Default ``name`` is the file stem."""
+        with warnings.catch_warnings():
+            # an empty file raises ValueError below; loadtxt's "no data"
+            # UserWarning on the way there is just noise
+            warnings.simplefilter("ignore", UserWarning)
+            bps = np.loadtxt(path, delimiter=",", usecols=0, ndmin=1)
+        if bps.size == 0:
+            raise ValueError(f"empty network trace: {path}")
+        if name is None:
+            name = pathlib.Path(path).stem
+        return cls(bps, rtt_s, name)
 
 
 def synthetic_trace(network: str = "4g", mobility: str = "driving", *,

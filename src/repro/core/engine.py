@@ -130,40 +130,52 @@ class FrameStep:
 
 @dataclasses.dataclass
 class RunStats:
+    """Frame-level statistics. Every statistic is total on the empty frame
+    list (0.0, not a crash/NaN): an all-dropped open-loop stream legitimately
+    completes zero frames and still gets aggregated by the fleet runtime."""
     frames: list[FrameResult]
+
+    def _mean(self, values: list[float]) -> float:
+        return float(np.mean(values)) if values else 0.0
 
     @property
     def violation_ratio(self) -> float:
-        return float(np.mean([f.violated for f in self.frames]))
+        return self._mean([f.violated for f in self.frames])
 
     @property
     def avg_throughput_fps(self) -> float:
+        if not self.frames:
+            return 0.0
         total = sum(f.latency_s for f in self.frames)
         return len(self.frames) / total if total > 0 else float("inf")
 
     @property
     def avg_latency_s(self) -> float:
-        return float(np.mean([f.latency_s for f in self.frames]))
+        return self._mean([f.latency_s for f in self.frames])
 
     @property
     def p50_latency_s(self) -> float:
+        if not self.frames:
+            return 0.0
         return float(np.percentile([f.latency_s for f in self.frames], 50))
 
     @property
     def p99_latency_s(self) -> float:
+        if not self.frames:
+            return 0.0
         return float(np.percentile([f.latency_s for f in self.frames], 99))
 
     @property
     def avg_accuracy(self) -> float:
-        return float(np.mean([f.accuracy for f in self.frames]))
+        return self._mean([f.accuracy for f in self.frames])
 
     @property
     def avg_deviation(self) -> float:
-        return float(np.mean([f.deviation for f in self.frames]))
+        return self._mean([f.deviation for f in self.frames])
 
     @property
     def avg_queue_s(self) -> float:
-        return float(np.mean([f.queue_s for f in self.frames]))
+        return self._mean([f.queue_s for f in self.frames])
 
 
 # ---------------------------------------------------------------------------

@@ -19,10 +19,20 @@ delay, cloud utilization):
   PYTHONPATH=src python -m repro.launch.serve --streams 64 --network 4g \
       --mobility driving
 
-Fleet knobs: ``--capacity`` (concurrent cloud batch executors), ``--max-batch``
-/ ``--batch-wait-ms`` (micro-batch window; default max-batch min(8, N) so
-``--streams 1`` reproduces the single-stream engine exactly), ``--period-ms``
-(min frame spacing per stream; 0 = closed loop).
+Fleet knobs: ``--capacity`` (concurrent cloud batch executors; 0 = scale with
+stream count), ``--max-batch`` / ``--batch-wait-ms`` (micro-batch window;
+default max-batch min(8, N) so ``--streams 1`` reproduces the single-stream
+engine exactly), ``--period-ms`` (min frame spacing per stream; 0 = closed
+loop).
+
+Workload scenarios (``repro.serving.workload``): ``--workload spec.json``
+loads a full declarative scenario; the shorthands compose one from flags —
+``--arrivals poisson|mmpp`` + ``--rate-fps`` (open-loop arrivals with
+``--max-inflight`` admission control; overload reports a drop ratio),
+``--tiers phone jetson laptop`` (heterogeneous device tiers, round-robin),
+``--trace-csv FILE_OR_DIR`` (real-trace replay instead of synthetic Markov
+traces), and ``--autoscale`` (+ ``--autoscale-min/max``: utilization-driven
+cloud capacity scaling, reported as a capacity timeline / capacity-seconds).
 
 Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
@@ -33,7 +43,7 @@ compiled-plan cache.
 from __future__ import annotations
 
 import argparse
-import dataclasses
+
 
 import jax
 import numpy as np
@@ -43,6 +53,7 @@ from repro.core import bandwidth, engine, planner, profiler, pruning, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
 from repro.serving import fleet as fleet_lib
+from repro.serving import workload as workload_lib
 
 
 def make_profile(cfg: vit_lib.ViTConfig, sla_note: str = "") -> scheduler.ModelProfile:
@@ -60,40 +71,68 @@ def make_profile(cfg: vit_lib.ViTConfig, sla_note: str = "") -> scheduler.ModelP
         head_s=profiler.CLOUD_PLATFORM.head_latency(cfg.d_model, cfg.n_classes))
 
 
+def spec_from_args(args) -> workload_lib.WorkloadSpec:
+    """Compose a WorkloadSpec from ``--workload spec.json`` or the shorthand
+    flags (``--arrivals/--tiers/--trace-csv/--autoscale`` + classic knobs)."""
+    if args.workload:
+        return workload_lib.WorkloadSpec.from_json(args.workload)
+    arrivals = workload_lib.ArrivalConfig(
+        kind=args.arrivals, rate_fps=args.rate_fps,
+        burst_rate_fps=args.burst_rate_fps, period_s=args.period_ms / 1e3,
+        max_inflight=args.max_inflight)
+    if args.trace_csv:
+        network = workload_lib.NetworkConfig(kind="csv", path=args.trace_csv,
+                                             rtt_ms=args.trace_rtt_ms)
+    else:
+        network = workload_lib.NetworkConfig(network=args.network,
+                                             mobility=args.mobility)
+    autoscale = None
+    if args.autoscale:
+        autoscale = fleet_lib.AutoscaleConfig(min_capacity=args.autoscale_min,
+                                              max_capacity=args.autoscale_max)
+    return workload_lib.WorkloadSpec(
+        n_streams=args.streams, n_frames=args.frames, policy=args.policy,
+        sla_ms=args.sla_ms, seed=args.seed, arrivals=arrivals,
+        tiers=tuple(args.tiers), network=network,
+        capacity=args.capacity or None, max_batch=args.max_batch or None,
+        max_wait_ms=args.batch_wait_ms, autoscale=autoscale)
+
+
 def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
-    """``--streams N`` mode: N seeded streams through one shared cloud tier."""
-    streams = [
-        fleet_lib.StreamSpec(
-            trace=bandwidth.synthetic_trace(args.network, args.mobility,
-                                            steps=args.frames, seed=args.seed + si),
-            n_frames=args.frames, policy=args.policy,
-            period_s=args.period_ms / 1e3)
-        for si in range(args.streams)
-    ]
-    cloud = dataclasses.replace(
-        fleet_lib.default_cloud_config(args.streams),
-        capacity=args.capacity,
-        max_wait_s=args.batch_wait_ms / 1e3,
-        **({"max_batch": args.max_batch} if args.max_batch else {}))
-    rt = fleet_lib.FleetRuntime(profile, eng_cfg, streams, cloud=cloud,
-                                model_cfg=model_cfg, params=params)
+    """Fleet mode: a workload scenario through one shared cloud tier."""
+    spec = spec_from_args(args)
+    rt = workload_lib.build_runtime(spec, profile, eng_cfg,
+                                    model_cfg=model_cfg, params=params)
+    cloud = rt.cloud
     fs = rt.run(images=images)
 
-    print(f"[fleet] streams={args.streams} frames/stream={args.frames} "
-          f"policy={args.policy} sla={args.sla_ms}ms "
+    print(f"[fleet] workload={spec.name} streams={spec.n_streams} "
+          f"frames/stream={spec.n_frames} policy={spec.policy} "
+          f"arrivals={spec.arrivals.kind} sla={spec.sla_ms or args.sla_ms}ms "
           f"cloud(capacity={cloud.capacity} max_batch={cloud.max_batch} "
-          f"wait={cloud.max_wait_s*1e3:.1f}ms)")
-    print(f"{'stream':>6s} {'trace':24s} {'viol%':>6s} {'p50_ms':>8s} "
-          f"{'p99_ms':>9s} {'queue_ms':>9s}")
+          f"wait={cloud.max_wait_s*1e3:.1f}ms"
+          f"{' autoscale' if spec.autoscale else ''})")
+    print(f"{'stream':>6s} {'tier':8s} {'trace':24s} {'viol%':>6s} "
+          f"{'p50_ms':>8s} {'p99_ms':>9s} {'queue_ms':>9s} {'drop%':>6s}")
     for si, st in enumerate(fs.per_stream):
-        print(f"{si:6d} {streams[si].trace.name:24s} {100*st.violation_ratio:6.1f} "
+        spec_si = rt.streams[si]
+        offered = len(st.frames) + fs.dropped_per_stream[si]
+        drop = fs.dropped_per_stream[si] / offered if offered else 0.0
+        print(f"{si:6d} {spec_si.tier or 'uniform':8s} "
+              f"{spec_si.trace.name[:24]:24s} {100*st.violation_ratio:6.1f} "
               f"{st.p50_latency_s*1e3:8.1f} {st.p99_latency_s*1e3:9.1f} "
-              f"{st.avg_queue_s*1e3:9.2f}")
+              f"{st.avg_queue_s*1e3:9.2f} {100*drop:6.1f}")
     print(f"[fleet aggregate] frames={len(fs.all_frames)} "
           f"viol%={100*fs.violation_ratio:.1f} p50={fs.p50_latency_s*1e3:.1f}ms "
           f"p99={fs.p99_latency_s*1e3:.1f}ms queue={fs.avg_queue_s*1e3:.2f}ms "
+          f"drop%={100*fs.drop_ratio:.1f} "
           f"cloud_util={100*fs.cloud_utilization:.1f}% "
           f"avg_batch={fs.avg_batch_size:.2f} fps={fs.aggregate_fps:.1f}")
+    if spec.autoscale is not None:
+        print(f"[fleet autoscale] capacity peak={fs.peak_capacity} "
+              f"final={fs.final_capacity} "
+              f"capacity_seconds={fs.capacity_seconds:.2f} "
+              f"changes={len(fs.capacity_timeline) - 1}")
     return fs
 
 
@@ -113,18 +152,58 @@ def main(argv=None):
     ap.add_argument("--policy", default="janus",
                     choices=["janus", "device", "cloud", "mixed"],
                     help="fleet mode: per-stream scheduling policy")
-    ap.add_argument("--capacity", type=int, default=4,
-                    help="fleet mode: concurrent cloud batch executors")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="fleet mode: concurrent cloud batch executors "
+                         "(0 = scale with stream count)")
     ap.add_argument("--max-batch", type=int, default=0,
                     help="fleet mode: micro-batch size (0 = min(8, streams))")
     ap.add_argument("--batch-wait-ms", type=float, default=5.0,
                     help="fleet mode: micro-batch deadline window")
     ap.add_argument("--period-ms", type=float, default=0.0,
                     help="fleet mode: min frame spacing per stream")
+    ap.add_argument("--workload", default="",
+                    help="fleet mode: JSON WorkloadSpec scenario (overrides "
+                         "the shorthand workload flags below)")
+    ap.add_argument("--arrivals", default="closed",
+                    choices=["closed", "poisson", "mmpp"],
+                    help="per-stream arrival process (open-loop kinds drop "
+                         "overload arrivals when --max-inflight is set)")
+    ap.add_argument("--rate-fps", type=float, default=10.0,
+                    help="open-loop arrival rate (poisson / mmpp calm state)")
+    ap.add_argument("--burst-rate-fps", type=float, default=40.0,
+                    help="mmpp burst-state arrival rate")
+    ap.add_argument("--max-inflight", type=int, default=0,
+                    help="per-stream admission bound (0 = unbounded)")
+    ap.add_argument("--tiers", nargs="+", default=["uniform"],
+                    help="device tiers assigned round-robin to streams "
+                         f"(known: {sorted(workload_lib.DEVICE_TIERS)})")
+    ap.add_argument("--trace-csv", default="",
+                    help="replay real network traces: one CSV file (shared) "
+                         "or a directory of *.csv (round-robin per stream)")
+    ap.add_argument("--trace-rtt-ms", type=float, default=42.2,
+                    help="RTT to pair with --trace-csv traces")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="utilization-driven cloud capacity scaling")
+    ap.add_argument("--autoscale-min", type=int, default=1)
+    ap.add_argument("--autoscale-max", type=int, default=16)
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
     args = ap.parse_args(argv)
+
+    if args.streams <= 0 and not args.workload:
+        # classic single-stream mode: fail loudly instead of silently
+        # ignoring fleet-only workload flags
+        fleet_only = [flag for flag, used in [
+            ("--arrivals", args.arrivals != "closed"),
+            ("--max-inflight", args.max_inflight != 0),
+            ("--tiers", args.tiers != ["uniform"]),
+            ("--trace-csv", bool(args.trace_csv)),
+            ("--autoscale", args.autoscale),
+        ] if used]
+        if fleet_only:
+            ap.error(f"{' '.join(fleet_only)} only work in fleet mode "
+                     "(--streams N or --workload spec.json)")
 
     paper = get_arch("janus-vit-l384")
     cfg_timing = paper.config          # timing plane: the paper's ViT-L@384
@@ -148,7 +227,7 @@ def main(argv=None):
 
     eng_cfg = engine.EngineConfig(sla_s=args.sla_ms / 1e3, execute=args.execute,
                                   planner=args.planner)
-    if args.streams > 0:
+    if args.streams > 0 or args.workload:
         run_fleet(args, profile, eng_cfg, model_cfg=model_cfg, params=params,
                   images=images)
         return

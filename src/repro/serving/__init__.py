@@ -1,12 +1,20 @@
-"""Serving tier: request batching (``batcher``) and the multi-stream fleet
-runtime (``fleet``)."""
+"""Serving tier: request batching (``batcher``), the multi-stream fleet
+runtime (``fleet``), and declarative workload scenarios (``workload``)."""
 from repro.serving.batcher import (ContinuousBatcher, KVSlotManager,
                                    MicroBatcher, Request)
-from repro.serving.fleet import (CloudTierConfig, FleetRuntime, FleetStats,
-                                 StreamSpec, default_cloud_config)
+from repro.serving.fleet import (AutoscaleConfig, Autoscaler, CloudTierConfig,
+                                 FleetRuntime, FleetStats, StreamSpec,
+                                 default_cloud_config)
+from repro.serving.workload import (ArrivalConfig, DeviceTier, DEVICE_TIERS,
+                                    NetworkConfig, WorkloadSpec,
+                                    arrival_times, build_runtime,
+                                    stream_seeds, tier_profile)
 
 __all__ = [
     "ContinuousBatcher", "KVSlotManager", "MicroBatcher", "Request",
-    "CloudTierConfig", "FleetRuntime", "FleetStats", "StreamSpec",
-    "default_cloud_config",
+    "AutoscaleConfig", "Autoscaler", "CloudTierConfig", "FleetRuntime",
+    "FleetStats", "StreamSpec", "default_cloud_config",
+    "ArrivalConfig", "DeviceTier", "DEVICE_TIERS", "NetworkConfig",
+    "WorkloadSpec", "arrival_times", "build_runtime", "stream_seeds",
+    "tier_profile",
 ]

@@ -43,6 +43,26 @@ device partition runs (compiled, via the fleet-shared ``CompiledPlanCache``)
 at plan time, and the pending cloud partitions of a dispatched micro-batch
 execute as one stacked batched forward per geometry group
 (``engine.run_cloud_batch``) instead of serially per frame.
+
+Workload hooks (driven declaratively by ``repro.serving.workload``):
+
+  * **open-loop arrivals** — a stream with ``arrival_times`` launches frame i
+    at the given absolute time instead of waiting for frame i-1 (closed loop
+    remains the default). Overlapping frames of one stream serialize their
+    scheduler+device phase on the client's single device (comm pipelines on
+    the radio). ``max_inflight`` is the per-stream admission controller: an
+    arrival finding that many frames still in flight is *dropped* (counted in
+    ``FleetStats.dropped_per_stream``), so overload shows up as a drop ratio
+    instead of unbounded queueing.
+  * **heterogeneous device tiers** — ``StreamSpec.profile`` overrides the
+    fleet-wide ``ModelProfile`` for that stream's engine, so a phone-class
+    client plans against phone-class device latencies. Tier profiles are
+    value-equal per tier, so ``planner.tables_for`` shares one planner-tables
+    instance per *tier*, not per stream.
+  * **cloud autoscaling** — an ``Autoscaler`` samples windowed utilization of
+    the shared tier every ``interval_s`` and grows/shrinks the executor count
+    between ``min_capacity``/``max_capacity`` (with cooldown); the capacity
+    timeline and capacity-seconds cost land in ``FleetStats``.
 """
 from __future__ import annotations
 
@@ -70,6 +90,13 @@ class StreamSpec:
     policy: str = "janus"
     sla_s: float | None = None   # per-stream SLA override (None = fleet default)
     period_s: float = 0.0        # min frame spacing; 0 = back-to-back closed loop
+    # -- workload hooks (all default to the classic closed-loop behavior) --
+    arrival_times: tuple[float, ...] | None = None
+    # open-loop: absolute arrival time per frame (None = closed loop)
+    max_inflight: int = 0        # admission: drop arrivals beyond this many
+    # in-flight frames (0 = unbounded; closed loop never exceeds 1)
+    profile: ModelProfile | None = None  # device-tier override (None = fleet-wide)
+    tier: str = ""               # tier label for reporting only
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,14 +117,75 @@ class CloudTierConfig:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {self.max_wait_s}")
+        if self.batch_growth < 0:
+            raise ValueError(f"batch_growth must be >= 0, got {self.batch_growth}")
 
 
 def default_cloud_config(n_streams: int) -> CloudTierConfig:
-    """Sensible shared-tier defaults for N streams. With one stream the
-    batcher is transparent (``max_batch=1`` flushes every offer immediately),
-    which is what makes the N=1 fleet bit-identical to the single-stream
-    engine."""
-    return CloudTierConfig(max_batch=max(1, min(8, n_streams)))
+    """Sensible shared-tier defaults for N streams: one batch executor per
+    ``max_batch``-worth of streams (capacity scales with fleet size instead of
+    staying pinned at the dataclass default). With one stream the batcher is
+    transparent (``max_batch=1`` flushes every offer immediately) and capacity
+    is irrelevant, which is what makes the N=1 fleet bit-identical to the
+    single-stream engine."""
+    max_batch = max(1, min(8, n_streams))
+    capacity = max(1, min(32, -(-n_streams // max_batch)))
+    return CloudTierConfig(capacity=capacity, max_batch=max_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Utilization-driven scaling of the shared tier's executor count.
+
+    Every ``interval_s`` the runtime samples windowed utilization (cloud busy
+    seconds dispatched in the window / ``capacity * interval_s``) and grows by
+    ``step`` above ``high_util``, shrinks by ``step`` below ``low_util``,
+    clamped to [``min_capacity``, ``max_capacity``]; after a change no further
+    change happens for ``cooldown_s``."""
+    min_capacity: int = 1
+    max_capacity: int = 16
+    interval_s: float = 0.25
+    cooldown_s: float = 0.5
+    high_util: float = 0.85
+    low_util: float = 0.30
+    step: int = 1
+
+    def __post_init__(self):
+        if self.min_capacity < 1:
+            raise ValueError(f"min_capacity must be >= 1, got {self.min_capacity}")
+        if self.max_capacity < self.min_capacity:
+            raise ValueError("max_capacity must be >= min_capacity, got "
+                             f"{self.max_capacity} < {self.min_capacity}")
+        if self.interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {self.interval_s}")
+        if not 0.0 <= self.low_util < self.high_util:
+            raise ValueError("need 0 <= low_util < high_util, got "
+                             f"{self.low_util} / {self.high_util}")
+        if self.step < 1:
+            raise ValueError(f"step must be >= 1, got {self.step}")
+
+
+class Autoscaler:
+    """Stateful controller for one fleet run (tracks the cooldown clock)."""
+
+    def __init__(self, cfg: AutoscaleConfig):
+        self.cfg = cfg
+        self._last_change_s = -float("inf")
+
+    def initial_capacity(self, configured: int) -> int:
+        return min(max(configured, self.cfg.min_capacity), self.cfg.max_capacity)
+
+    def decide(self, now: float, utilization: float, capacity: int) -> int:
+        c = self.cfg
+        if now - self._last_change_s < c.cooldown_s:
+            return capacity
+        if utilization > c.high_util and capacity < c.max_capacity:
+            self._last_change_s = now
+            return min(capacity + c.step, c.max_capacity)
+        if utilization < c.low_util and capacity > c.min_capacity:
+            self._last_change_s = now
+            return max(capacity - c.step, c.min_capacity)
+        return capacity
 
 
 @dataclasses.dataclass
@@ -105,8 +193,13 @@ class FleetStats:
     per_stream: list[RunStats]
     cloud_busy_s: float
     horizon_s: float
-    capacity: int
+    capacity: int                # configured (initial) executor count
     batch_sizes: list[int]
+    dropped_per_stream: list[int] = dataclasses.field(default_factory=list)
+    # executor-count step function [(t, capacity), ...]; static runs hold the
+    # single entry (0, capacity)
+    capacity_timeline: list[tuple[float, int]] = \
+        dataclasses.field(default_factory=list)
 
     @functools.cached_property
     def aggregate(self) -> RunStats:
@@ -139,10 +232,47 @@ class FleetStats:
         return self.aggregate.avg_queue_s
 
     @property
-    def cloud_utilization(self) -> float:
+    def capacity_seconds(self) -> float:
+        """Integral of the executor count over the horizon — the provisioning
+        cost side of the SLA-vs-capacity frontier. Static runs degenerate to
+        ``capacity * horizon_s``."""
         if self.horizon_s <= 0:
             return 0.0
-        return min(1.0, self.cloud_busy_s / (self.capacity * self.horizon_s))
+        tl = self.capacity_timeline or [(0.0, self.capacity)]
+        total = 0.0
+        for (t0, c), (t1, _) in zip(tl, tl[1:] + [(self.horizon_s, 0)]):
+            t1 = min(t1, self.horizon_s)
+            if t1 > t0:
+                total += c * (t1 - t0)
+        return total
+
+    @property
+    def cloud_utilization(self) -> float:
+        cap_s = self.capacity_seconds
+        if cap_s <= 0:
+            return 0.0
+        return min(1.0, self.cloud_busy_s / cap_s)
+
+    @property
+    def peak_capacity(self) -> int:
+        tl = self.capacity_timeline or [(0.0, self.capacity)]
+        return max(c for _, c in tl)
+
+    @property
+    def final_capacity(self) -> int:
+        tl = self.capacity_timeline or [(0.0, self.capacity)]
+        return tl[-1][1]
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(self.dropped_per_stream)
+
+    @property
+    def drop_ratio(self) -> float:
+        """Dropped arrivals / offered arrivals (offered = completed + dropped).
+        Closed-loop fleets never drop, so this is 0.0 there."""
+        offered = len(self.all_frames) + self.total_dropped
+        return self.total_dropped / offered if offered else 0.0
 
     @property
     def avg_batch_size(self) -> float:
@@ -169,20 +299,25 @@ class FleetRuntime:
                  streams: list[StreamSpec],
                  cloud: CloudTierConfig | None = None,
                  acc_model: AccuracyModel | None = None,
-                 model_cfg=None, params=None):
+                 model_cfg=None, params=None,
+                 autoscaler: Autoscaler | AutoscaleConfig | None = None):
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
+        if isinstance(autoscaler, AutoscaleConfig):
+            autoscaler = Autoscaler(autoscaler)
+        self.autoscaler = autoscaler
         acc = acc_model or AccuracyModel()
         self.model_cfg = model_cfg
         self.params = params
         # one compiled-plan cache for the whole fleet: streams share the model,
         # so same-geometry partition programs compile once fleet-wide
         self.plan_cache = CompiledPlanCache()
-        # per-stream scheduler state: a dedicated engine (shared profile/model/
-        # planner tables/plan cache) so per-stream SLAs drive per-stream
-        # decisions without re-deriving any model-dependent state
+        # per-stream scheduler state: a dedicated engine (shared model/plan
+        # cache; profile per device tier, planner tables value-shared per
+        # tier) so per-stream SLAs and hardware drive per-stream decisions
+        # without re-deriving any model-dependent state
         self.engines = [
-            JanusEngine(profile,
+            JanusEngine(s.profile if s.profile is not None else profile,
                         dataclasses.replace(
                             base_cfg,
                             sla_s=base_cfg.sla_s if s.sla_s is None else s.sla_s),
@@ -198,16 +333,45 @@ class FleetRuntime:
                       for s in streams]
         results: list[list[FrameResult]] = [[] for _ in streams]
         batch_sizes: list[int] = []
+        dropped = [0] * len(streams)
+        inflight = [0] * len(streams)
+        device_free = [0.0] * len(streams)  # per-client device busy-until
         micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
         executors: list[float] = []   # busy-until heap, capped at `capacity`
         items: dict[int, _CloudItem] = {}
         rid = itertools.count()
         seq = itertools.count()       # FIFO tie-break for simultaneous events
         events: list = []             # (time, seq, callback)
-        state = {"busy": 0.0, "horizon": 0.0}
+        # fresh controller per run: cooldown state must not leak between
+        # repeated run() calls on one runtime
+        scaler = Autoscaler(self.autoscaler.cfg) if self.autoscaler else None
+        capacity0 = scaler.initial_capacity(cloud.capacity) if scaler \
+            else cloud.capacity
+        # outstanding (start, end) cloud service intervals, consumed by the
+        # autoscale control loop (billed by window overlap, not lump-summed
+        # at dispatch — a service longer than the control window must keep
+        # later windows looking busy)
+        service_intervals: list[tuple[float, float]] = []
+        state = {"busy": 0.0, "horizon": 0.0, "capacity": capacity0,
+                 # arrivals still owed a verdict (finish or drop): the
+                 # autoscale control timer keeps itself alive only while > 0
+                 "remaining": sum(
+                     s.n_frames if s.arrival_times is None
+                     else min(s.n_frames, len(s.arrival_times))
+                     for s in streams)}
+        cap_timeline: list[tuple[float, int]] = [(0.0, capacity0)]
 
         def push(t: float, fn) -> None:
             heapq.heappush(events, (t, next(seq), fn))
+
+        def arrive(si: int, fi: int, t0: float) -> None:
+            spec = streams[si]
+            if spec.max_inflight and inflight[si] >= spec.max_inflight:
+                dropped[si] += 1           # admission control: overload drops
+                state["remaining"] -= 1
+                return
+            inflight[si] += 1
+            start_frame(si, fi, t0)
 
         def start_frame(si: int, fi: int, t0: float) -> None:
             eng, spec = self.engines[si], streams[si]
@@ -215,7 +379,14 @@ class FleetRuntime:
                                   images=images, defer_cloud=True)
             estimators[si].observe(step.bandwidth_bps)
             bd = step.breakdown
-            local_done = t0 + eng.overhead_s(step) + bd.device_s + bd.comm_s
+            # one device per client: overlapping open-loop frames serialize
+            # their scheduler+device phase on the stream's own hardware (the
+            # radio pipelines, so comm overlaps the next frame's compute).
+            # Closed loop never has two frames in flight, so this never binds
+            # there and the N=1 engine identity is untouched.
+            dev_start = max(t0, device_free[si])
+            device_free[si] = dev_start + eng.overhead_s(step) + bd.device_s
+            local_done = device_free[si] + bd.comm_s
             if bd.cloud_s <= 0.0:  # device-only split: never touches the cloud
                 push(local_done, lambda t: finish_frame(si, fi, step, t0, t))
             else:
@@ -249,12 +420,18 @@ class FleetRuntime:
                                 [m.step.exec_plan for m in members])
             service = max(m.step.breakdown.cloud_s for m in members) \
                 * (1.0 + cloud.batch_growth * (len(batch) - 1))
-            if len(executors) < cloud.capacity:
+            # retire executor slots freed past a capacity shrink (lazy: slots
+            # mid-service when the scaler shrank drain first)
+            while len(executors) > state["capacity"] and executors[0] <= now:
+                heapq.heappop(executors)
+            if len(executors) < state["capacity"]:
                 start = now
             else:  # all executors busy (or recently so): wait for earliest-free
                 start = max(now, heapq.heappop(executors))
             heapq.heappush(executors, start + service)
             state["busy"] += service
+            if scaler is not None:
+                service_intervals.append((start, start + service))
             batch_sizes.append(len(batch))
             done = start + service
             for m in members:
@@ -270,11 +447,41 @@ class FleetRuntime:
                 queue_s = 0.0
             results[si].append(eng.frame_result(step, queue_s=queue_s))
             state["horizon"] = max(state["horizon"], tf)
-            if fi + 1 < spec.n_frames:
-                start_frame(si, fi + 1, max(tf, t0 + spec.period_s))
+            state["remaining"] -= 1
+            inflight[si] -= 1
+            if spec.arrival_times is None and fi + 1 < spec.n_frames:
+                # closed loop: the next frame arrives when this one is done
+                arrive(si, fi + 1, max(tf, t0 + spec.period_s))
 
-        for si in range(len(streams)):
-            start_frame(si, 0, 0.0)
+        def set_capacity(newc: int, now: float) -> None:
+            if newc == state["capacity"]:
+                return
+            while len(executors) > newc and executors[0] <= now:
+                heapq.heappop(executors)  # retire free slots immediately
+            state["capacity"] = newc
+            cap_timeline.append((now, newc))
+
+        def control(now: float) -> None:
+            window = scaler.cfg.interval_s
+            w0, busy, keep = now - window, 0.0, []
+            for s, e in service_intervals:
+                busy += max(0.0, min(e, now) - max(s, w0))
+                if e > now:  # still busy (or queued to start): next window too
+                    keep.append((s, e))
+            service_intervals[:] = keep
+            util = busy / (state["capacity"] * window)
+            set_capacity(scaler.decide(now, util, state["capacity"]), now)
+            if state["remaining"] > 0:
+                push(now + window, control)
+
+        for si, spec in enumerate(streams):
+            if spec.arrival_times is None:
+                arrive(si, 0, 0.0)
+            else:  # open loop: every arrival is scheduled up front
+                for fi, ta in enumerate(spec.arrival_times[:spec.n_frames]):
+                    push(float(ta), lambda t, si=si, fi=fi: arrive(si, fi, t))
+        if scaler is not None:
+            push(scaler.cfg.interval_s, control)
         while True:
             while events:
                 t, _, fn = heapq.heappop(events)
@@ -286,5 +493,7 @@ class FleetRuntime:
         return FleetStats(per_stream=[RunStats(fr) for fr in results],
                           cloud_busy_s=state["busy"],
                           horizon_s=state["horizon"],
-                          capacity=cloud.capacity,
-                          batch_sizes=batch_sizes)
+                          capacity=capacity0,
+                          batch_sizes=batch_sizes,
+                          dropped_per_stream=dropped,
+                          capacity_timeline=cap_timeline)

@@ -1,0 +1,369 @@
+"""Declarative workload scenarios for the fleet runtime (the layer between
+"streams" and "runtime").
+
+The fleet runtime (``repro.serving.fleet``) exposes mechanism: closed- or
+open-loop frame arrivals with admission control, per-stream device profiles,
+per-stream network traces, and a dynamically scaled cloud tier. This module is
+the *policy* layer that composes those into a scenario:
+
+  * **arrival processes** — ``ArrivalConfig`` describes how frames arrive per
+    stream: ``closed`` (next frame after the previous completes, today's
+    behavior), ``poisson`` (open-loop exponential inter-arrivals at
+    ``rate_fps``), or ``mmpp`` (a 2-state Markov-modulated Poisson process:
+    calm ``rate_fps`` / burst ``burst_rate_fps``). Open-loop arrivals pair
+    with ``max_inflight`` admission control so overload produces a reported
+    drop ratio instead of unbounded queueing.
+  * **device tiers** — named hardware classes (``phone`` / ``jetson`` /
+    ``laptop``) scale the fitted ``ModelProfile``'s device-side latencies, so
+    each stream's scheduler plans against its own hardware. Tier profiles are
+    LRU-cached per (base profile, tier) — and because ``planner.tables_for``
+    caches by profile *value*, planner tables are shared per tier, not
+    rebuilt per stream.
+  * **network sources** — synthetic Markov traces (per-stream spawned seeds),
+    one CSV replayed by every stream, or a directory of CSVs assigned
+    round-robin (``NetworkTrace.from_csv``).
+  * **cloud autoscaling** — ``fleet.AutoscaleConfig``, forwarded to the
+    runtime's utilization-driven controller.
+
+``WorkloadSpec`` is JSON-loadable (``--workload spec.json`` in
+``repro.launch.serve``); ``build_runtime`` turns a spec plus a fitted profile
+into a ready ``FleetRuntime``. Per-stream randomness (traces and arrivals) is
+derived by spawning ``np.random.SeedSequence`` children off the spec's base
+seed, so stream i's trace/arrivals are reproducible and distinct regardless
+of how many streams run beside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import bandwidth, planner, profiler
+from repro.core.bandwidth import NetworkTrace
+from repro.core.engine import EngineConfig
+from repro.core.scheduler import ModelProfile
+from repro.serving import fleet
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+ARRIVAL_KINDS = ("closed", "poisson", "mmpp")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """How frames arrive on one stream.
+
+    ``closed`` is the classic closed loop (``period_s`` = min spacing). The
+    open-loop kinds generate absolute arrival times up front: ``poisson``
+    draws exponential inter-arrivals at ``rate_fps``; ``mmpp`` switches
+    between a calm state (``rate_fps``) and a burst state
+    (``burst_rate_fps``) after each arrival with probabilities ``p_burst`` /
+    ``p_calm``. ``max_inflight`` is the per-stream admission bound (0 =
+    unbounded; ignored for closed loop, which never exceeds one in flight).
+    """
+    kind: str = "closed"
+    rate_fps: float = 10.0
+    burst_rate_fps: float = 40.0
+    p_burst: float = 0.05
+    p_calm: float = 0.30
+    period_s: float = 0.0
+    max_inflight: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ARRIVAL_KINDS:
+            raise ValueError(f"arrival kind must be one of {ARRIVAL_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.kind != "closed" and self.rate_fps <= 0:
+            raise ValueError(f"rate_fps must be > 0, got {self.rate_fps}")
+        if self.kind == "mmpp" and self.burst_rate_fps <= 0:
+            raise ValueError(
+                f"burst_rate_fps must be > 0, got {self.burst_rate_fps}")
+        for pname, p in (("p_burst", self.p_burst), ("p_calm", self.p_calm)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{pname} must be in [0, 1], got {p}")
+        if self.max_inflight < 0:
+            raise ValueError(
+                f"max_inflight must be >= 0, got {self.max_inflight}")
+
+
+def arrival_times(cfg: ArrivalConfig, n_frames: int,
+                  rng: np.random.Generator) -> tuple[float, ...] | None:
+    """Absolute arrival times for one open-loop stream (None = closed loop)."""
+    if cfg.kind == "closed":
+        return None
+    if cfg.kind == "poisson":
+        return tuple(np.cumsum(rng.exponential(1.0 / cfg.rate_fps, n_frames)))
+    # mmpp: per-arrival state switch, exponential gap at the state's rate
+    out, t, burst = [], 0.0, False
+    for _ in range(n_frames):
+        rate = cfg.burst_rate_fps if burst else cfg.rate_fps
+        t += float(rng.exponential(1.0 / rate))
+        out.append(t)
+        u = rng.random()
+        if not burst and u < cfg.p_burst:
+            burst = True
+        elif burst and u < cfg.p_calm:
+            burst = False
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# device tiers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTier:
+    """A named hardware class: multiplies the fitted profile's device-side
+    latencies (per-layer linear model + embed). ``jetson`` is the calibration
+    baseline (the profile is fitted against a Jetson-class edge platform)."""
+    name: str
+    compute_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.compute_scale <= 0:
+            raise ValueError(
+                f"compute_scale must be > 0, got {self.compute_scale}")
+
+
+DEVICE_TIERS = {
+    "uniform": DeviceTier("uniform", 1.0),   # alias: the fleet-wide profile
+    "jetson": DeviceTier("jetson", 1.0),
+    "phone": DeviceTier("phone", 4.0),
+    "laptop": DeviceTier("laptop", 0.45),
+}
+
+_TIER_CACHE: OrderedDict[tuple, ModelProfile] = OrderedDict()
+_TIER_CACHE_MAX = 64
+
+
+def resolve_tier(tier: str | DeviceTier) -> DeviceTier:
+    if isinstance(tier, DeviceTier):
+        return tier
+    try:
+        return DEVICE_TIERS[tier]
+    except KeyError:
+        raise ValueError(f"unknown device tier {tier!r}; known: "
+                         f"{sorted(DEVICE_TIERS)}") from None
+
+
+def tier_profile(base: ModelProfile, tier: str | DeviceTier) -> ModelProfile:
+    """The base profile with device-side latencies scaled for ``tier``.
+
+    LRU-cached by (base profile value, tier), so N same-tier streams share
+    one ModelProfile object — and therefore (via ``planner.tables_for``'s
+    value cache) one PlannerTables instance per tier, not per stream.
+    """
+    tier = resolve_tier(tier)
+    if tier.compute_scale == 1.0:
+        return base
+    key = (planner._profile_signature(base), tier.name, tier.compute_scale)
+    hit = _TIER_CACHE.get(key)
+    if hit is not None:
+        _TIER_CACHE.move_to_end(key)
+        return hit
+    s = tier.compute_scale
+    prof = dataclasses.replace(
+        base,
+        device=profiler.LinearProfiler(base.device.a * s, base.device.b * s,
+                                       base.device.r),
+        device_embed_s=base.device_embed_s * s)
+    _TIER_CACHE[key] = prof
+    while len(_TIER_CACHE) > _TIER_CACHE_MAX:
+        _TIER_CACHE.popitem(last=False)
+    return prof
+
+
+# ---------------------------------------------------------------------------
+# network sources
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """Where each stream's network trace comes from: ``synthetic`` (seeded
+    Markov generator, one distinct trace per stream) or ``csv`` (``path`` is
+    one CSV replayed by every stream, or a directory of CSVs assigned
+    round-robin)."""
+    kind: str = "synthetic"
+    network: str = "4g"
+    mobility: str = "driving"
+    path: str | None = None
+    rtt_ms: float = 42.2
+
+    def __post_init__(self):
+        if self.kind not in ("synthetic", "csv"):
+            raise ValueError(f"network kind must be 'synthetic' or 'csv', "
+                             f"got {self.kind!r}")
+        if self.kind == "csv" and not self.path:
+            raise ValueError("network kind 'csv' requires a path")
+
+
+def csv_traces(path: str, rtt_s: float) -> list[NetworkTrace]:
+    """Trace(s) from a CSV file or a directory of ``*.csv`` (sorted)."""
+    p = pathlib.Path(path)
+    if p.is_dir():
+        files = sorted(p.glob("*.csv"))
+        if not files:
+            raise ValueError(f"no *.csv traces in {path}")
+        return [NetworkTrace.from_csv(str(f), rtt_s) for f in files]
+    return [NetworkTrace.from_csv(str(p), rtt_s)]
+
+
+def build_traces(cfg: NetworkConfig, n_streams: int, steps: int,
+                 trace_seeds: Sequence[int]) -> list[NetworkTrace]:
+    if cfg.kind == "synthetic":
+        return [bandwidth.synthetic_trace(cfg.network, cfg.mobility,
+                                          steps=steps, seed=trace_seeds[i])
+                for i in range(n_streams)]
+    pool = csv_traces(cfg.path, cfg.rtt_ms / 1e3)
+    return [pool[i % len(pool)] for i in range(n_streams)]
+
+
+# ---------------------------------------------------------------------------
+# per-stream randomness
+# ---------------------------------------------------------------------------
+
+
+def stream_seed_sequences(base_seed: int,
+                          n_streams: int) -> list[np.random.SeedSequence]:
+    """Independent per-stream seed sequences spawned off one base seed.
+    Child i is a function of (base_seed, i) only, so stream i's randomness
+    does not change when the fleet grows or shrinks."""
+    return np.random.SeedSequence(base_seed).spawn(n_streams)
+
+
+def stream_seeds(base_seed: int, n_streams: int) -> list[int]:
+    """Per-stream integer seeds (for APIs that take an int, e.g.
+    ``synthetic_trace``), derived from the spawned sequences."""
+    return [int(ss.generate_state(1)[0])
+            for ss in stream_seed_sequences(base_seed, n_streams)]
+
+
+# ---------------------------------------------------------------------------
+# the scenario spec
+# ---------------------------------------------------------------------------
+
+
+def _from_dict(cls, d: dict, what: str):
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(f"unknown {what} keys {sorted(unknown)}; "
+                         f"known: {sorted(fields)}")
+    return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One serving scenario, JSON-loadable. Defaults reproduce the classic
+    fleet: closed loop, one uniform tier, synthetic traces, static cloud."""
+    n_streams: int = 4
+    n_frames: int = 30
+    policy: str = "janus"
+    sla_ms: float | None = None          # None = the base engine config's SLA
+    seed: int = 0
+    arrivals: ArrivalConfig = dataclasses.field(default_factory=ArrivalConfig)
+    tiers: tuple[str, ...] = ("uniform",)  # assigned round-robin to streams
+    network: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
+    # shared-tier overrides (None = default_cloud_config(n_streams) values)
+    capacity: int | None = None
+    max_batch: int | None = None
+    max_wait_ms: float | None = None
+    batch_growth: float | None = None
+    autoscale: fleet.AutoscaleConfig | None = None
+    name: str = "workload"
+
+    def __post_init__(self):
+        if self.n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {self.n_streams}")
+        if self.n_frames < 1:
+            raise ValueError(f"n_frames must be >= 1, got {self.n_frames}")
+        if not self.tiers:
+            raise ValueError("tiers must name at least one device tier")
+        for t in self.tiers:
+            resolve_tier(t)  # fail fast on unknown tier names
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadSpec":
+        d = dict(d)
+        if "arrivals" in d:
+            d["arrivals"] = _from_dict(ArrivalConfig, d["arrivals"], "arrivals")
+        if "network" in d:
+            d["network"] = _from_dict(NetworkConfig, d["network"], "network")
+        if d.get("autoscale") is not None:
+            d["autoscale"] = _from_dict(fleet.AutoscaleConfig, d["autoscale"],
+                                        "autoscale")
+        if "tiers" in d:
+            d["tiers"] = tuple(d["tiers"])
+        return _from_dict(cls, d, "workload")
+
+    @classmethod
+    def from_json(cls, path: str) -> "WorkloadSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tiers"] = list(self.tiers)
+        return d
+
+    # -- assembly -----------------------------------------------------------
+    def cloud_config(self) -> fleet.CloudTierConfig:
+        base = fleet.default_cloud_config(self.n_streams)
+        over = {k: v for k, v in
+                (("capacity", self.capacity), ("max_batch", self.max_batch),
+                 ("batch_growth", self.batch_growth))
+                if v is not None}
+        if self.max_wait_ms is not None:
+            over["max_wait_s"] = self.max_wait_ms / 1e3
+        return dataclasses.replace(base, **over) if over else base
+
+    def build_streams(self, profile: ModelProfile) -> list[fleet.StreamSpec]:
+        """Per-stream specs: spawned-seed traces and arrivals, round-robin
+        device tiers applied to the fitted profile."""
+        seqs = stream_seed_sequences(self.seed, self.n_streams)
+        specs = []
+        for si, ss in enumerate(seqs):
+            trace_ss, arrival_ss = ss.spawn(2)
+            tier = resolve_tier(self.tiers[si % len(self.tiers)])
+            if self.network.kind == "synthetic":
+                trace = bandwidth.synthetic_trace(
+                    self.network.network, self.network.mobility,
+                    steps=self.n_frames,
+                    seed=int(trace_ss.generate_state(1)[0]))
+            else:
+                trace = None  # filled from the CSV pool below
+            prof = tier_profile(profile, tier)
+            specs.append(fleet.StreamSpec(
+                trace=trace, n_frames=self.n_frames, policy=self.policy,
+                sla_s=None if self.sla_ms is None else self.sla_ms / 1e3,
+                period_s=self.arrivals.period_s,
+                arrival_times=arrival_times(self.arrivals, self.n_frames,
+                                            np.random.default_rng(arrival_ss)),
+                max_inflight=self.arrivals.max_inflight,
+                profile=None if prof is profile else prof,
+                tier=tier.name))
+        if self.network.kind == "csv":
+            pool = csv_traces(self.network.path, self.network.rtt_ms / 1e3)
+            specs = [dataclasses.replace(s, trace=pool[i % len(pool)])
+                     for i, s in enumerate(specs)]
+        return specs
+
+
+def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
+                  base_cfg: EngineConfig, *, acc_model=None,
+                  model_cfg=None, params=None) -> fleet.FleetRuntime:
+    """A ready-to-run FleetRuntime for the scenario."""
+    return fleet.FleetRuntime(
+        profile, base_cfg, spec.build_streams(profile),
+        cloud=spec.cloud_config(), acc_model=acc_model,
+        model_cfg=model_cfg, params=params,
+        autoscaler=spec.autoscale)

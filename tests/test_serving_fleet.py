@@ -302,3 +302,20 @@ def test_fleet_frames_complete_and_stats_sane():
     assert 0.0 <= fs.cloud_utilization <= 1.0
     assert fs.horizon_s > 0
     assert fs.p99_latency_s >= fs.p50_latency_s > 0
+
+
+def test_fleet_closed_loop_never_drops_and_capacity_stays_static():
+    """The workload hooks must be no-ops for classic closed-loop fleets:
+    zero drops, a single-entry capacity timeline, and the pre-autoscale
+    utilization denominator (capacity * horizon)."""
+    prof, cfg = _profile(), _cfg()
+    streams = [
+        fleet.StreamSpec(bandwidth.synthetic_trace("4g", "walking", steps=8,
+                                                   seed=s), 8)
+        for s in range(4)
+    ]
+    fs = fleet.FleetRuntime(prof, cfg, streams).run()
+    assert fs.dropped_per_stream == [0, 0, 0, 0]
+    assert fs.drop_ratio == 0.0
+    assert fs.capacity_timeline == [(0.0, fs.capacity)]
+    assert fs.capacity_seconds == pytest.approx(fs.capacity * fs.horizon_s)

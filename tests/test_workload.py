@@ -1,0 +1,497 @@
+"""Workload subsystem tests: arrival processes + admission drops, device
+tiers (per-tier planner-table sharing), CSV trace replay, cloud autoscaling,
+spawned per-stream seeds, WorkloadSpec JSON round trip, and the closed-loop
+regression against the plain fleet runtime."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from conftest import small_model_profile as _profile
+
+from repro.core import bandwidth, engine
+from repro.core.engine import RunStats
+from repro.serving import fleet, workload
+
+
+def _cfg(sla_s=0.3):
+    return engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+
+
+# --------------------------------------------- NetworkTrace.from_csv (replay)
+
+def test_network_trace_from_csv_parsing_and_wraparound(tmp_path):
+    p = tmp_path / "uplink.csv"
+    p.write_text("# bps, note\n1e6,a\n2e6,b\n3e6,c\n")
+    tr = bandwidth.NetworkTrace.from_csv(str(p), rtt_s=0.01)
+    assert tr.name == "uplink"          # default name = file stem
+    assert len(tr) == 3 and tr.rtt_s == 0.01
+    assert [tr.at(i) for i in range(3)] == [1e6, 2e6, 3e6]
+    # at() wraps past the end of the trace
+    assert tr.at(3) == 1e6 and tr.at(7) == 2e6 and tr.at(300) == 1e6
+
+
+def test_network_trace_from_csv_single_row(tmp_path):
+    """A one-row CSV must still be a length-1 trace (np.loadtxt returns a
+    0-d array there)."""
+    p = tmp_path / "one.csv"
+    p.write_text("5e6\n")
+    tr = bandwidth.NetworkTrace.from_csv(str(p), rtt_s=0.02)
+    assert len(tr) == 1 and tr.at(0) == tr.at(99) == 5e6
+
+
+def test_network_trace_from_csv_empty_rejected(tmp_path):
+    p = tmp_path / "empty.csv"
+    p.write_text("# header only\n")
+    with pytest.raises(ValueError):
+        bandwidth.NetworkTrace.from_csv(str(p), rtt_s=0.01)
+
+
+def test_csv_traces_directory_round_robin(tmp_path):
+    for i, name in enumerate(["a.csv", "b.csv"]):
+        (tmp_path / name).write_text(f"{(i + 1)}e6\n{(i + 1)}e6\n")
+    spec = workload.WorkloadSpec(
+        n_streams=5, n_frames=2,
+        network=workload.NetworkConfig(kind="csv", path=str(tmp_path),
+                                       rtt_ms=10.0))
+    streams = spec.build_streams(_profile())
+    assert [s.trace.name for s in streams] == ["a", "b", "a", "b", "a"]
+    assert streams[0].trace.at(0) == 1e6 and streams[1].trace.at(0) == 2e6
+    assert streams[0].trace.rtt_s == pytest.approx(0.01)
+
+
+def test_csv_single_file_shared_by_all_streams(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("9e6\n8e6\n")
+    spec = workload.WorkloadSpec(
+        n_streams=3, n_frames=2,
+        network=workload.NetworkConfig(kind="csv", path=str(p)))
+    streams = spec.build_streams(_profile())
+    assert all(s.trace is streams[0].trace for s in streams)
+
+
+# ------------------------------------------------- cloud config (satellites)
+
+def test_default_cloud_config_scales_capacity_with_streams():
+    assert fleet.default_cloud_config(1).capacity == 1
+    assert fleet.default_cloud_config(8).capacity == 1
+    assert fleet.default_cloud_config(9).capacity == 2
+    assert fleet.default_cloud_config(64).capacity == 8
+    assert fleet.default_cloud_config(1000).capacity == 32  # clamped
+    # max_batch behavior unchanged
+    assert fleet.default_cloud_config(1).max_batch == 1
+    assert fleet.default_cloud_config(64).max_batch == 8
+
+
+def test_cloud_tier_config_validation():
+    with pytest.raises(ValueError):
+        fleet.CloudTierConfig(capacity=0)
+    with pytest.raises(ValueError):
+        fleet.CloudTierConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        fleet.CloudTierConfig(max_wait_s=-0.001)
+    with pytest.raises(ValueError):
+        fleet.CloudTierConfig(batch_growth=-0.1)
+    fleet.CloudTierConfig(max_wait_s=0.0, batch_growth=0.0)  # boundary ok
+
+
+# -------------------------------------------------- per-stream spawned seeds
+
+def test_stream_seeds_deterministic_and_distinct():
+    a = workload.stream_seeds(42, 8)
+    assert a == workload.stream_seeds(42, 8)          # reproducible
+    assert len(set(a)) == 8                            # distinct
+    assert a != workload.stream_seeds(43, 8)           # seed-sensitive
+    # stream i's seed is independent of the fleet size
+    assert workload.stream_seeds(42, 3) == a[:3]
+
+
+def test_spec_traces_deterministic_and_stable_under_fleet_resize():
+    prof = _profile()
+    big = workload.WorkloadSpec(n_streams=6, n_frames=12, seed=9) \
+        .build_streams(prof)
+    small = workload.WorkloadSpec(n_streams=2, n_frames=12, seed=9) \
+        .build_streams(prof)
+    for s_small, s_big in zip(small, big):
+        np.testing.assert_array_equal(s_small.trace.bps, s_big.trace.bps)
+        assert s_small.arrival_times == s_big.arrival_times
+    # distinct streams get distinct traces
+    assert not np.array_equal(big[0].trace.bps, big[1].trace.bps)
+
+
+# ---------------------------------------------------------- arrival processes
+
+def test_arrival_times_closed_is_none():
+    rng = np.random.default_rng(0)
+    assert workload.arrival_times(workload.ArrivalConfig(), 10, rng) is None
+
+
+def test_arrival_times_poisson_rate_and_determinism():
+    cfg = workload.ArrivalConfig(kind="poisson", rate_fps=100.0)
+    t1 = workload.arrival_times(cfg, 2000, np.random.default_rng(1))
+    t2 = workload.arrival_times(cfg, 2000, np.random.default_rng(1))
+    assert t1 == t2
+    arr = np.asarray(t1)
+    assert len(arr) == 2000 and np.all(np.diff(arr) > 0)
+    # mean inter-arrival ~ 1/rate (law of large numbers, loose band)
+    assert 0.008 < float(np.mean(np.diff(arr))) < 0.012
+
+
+def test_arrival_times_mmpp_bursts_are_denser():
+    cfg = workload.ArrivalConfig(kind="mmpp", rate_fps=2.0,
+                                 burst_rate_fps=200.0, p_burst=0.3,
+                                 p_calm=0.3)
+    arr = np.asarray(workload.arrival_times(cfg, 3000,
+                                            np.random.default_rng(7)))
+    gaps = np.diff(arr)
+    assert np.all(gaps > 0)
+    # a mixture: some calm-scale gaps and some burst-scale gaps
+    assert float(np.max(gaps)) > 0.05 and float(np.min(gaps)) < 0.01
+
+
+def test_arrival_config_validation():
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="weird")
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="poisson", rate_fps=0.0)
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(max_inflight=-1)
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="mmpp", p_burst=5.0)
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="mmpp", p_calm=-0.1)
+
+
+# -------------------------------------------------------------- device tiers
+
+def test_tier_profile_scales_device_side_only():
+    prof = _profile()
+    phone = workload.tier_profile(prof, "phone")
+    scale = workload.DEVICE_TIERS["phone"].compute_scale
+    assert phone.device.a == pytest.approx(prof.device.a * scale)
+    assert phone.device.b == pytest.approx(prof.device.b * scale)
+    assert phone.device_embed_s == pytest.approx(prof.device_embed_s * scale)
+    # cloud side and transport are untouched
+    assert phone.cloud is prof.cloud
+    assert phone.token_bytes == prof.token_bytes
+    # unit-scale tiers return the base profile itself
+    assert workload.tier_profile(prof, "uniform") is prof
+    assert workload.tier_profile(prof, "jetson") is prof
+
+
+def test_tier_profile_cached_per_tier():
+    prof = _profile()
+    assert workload.tier_profile(prof, "phone") is \
+        workload.tier_profile(prof, "phone")
+    with pytest.raises(ValueError):
+        workload.resolve_tier("mainframe")
+
+
+def test_fleet_shares_planner_tables_per_tier_not_per_stream():
+    prof, cfg = _profile(), _cfg()
+    spec = workload.WorkloadSpec(n_streams=6, n_frames=4,
+                                 tiers=("phone", "laptop"))
+    rt = workload.build_runtime(spec, prof, cfg)
+    phone_engines = [e for e, s in zip(rt.engines, rt.streams)
+                     if s.tier == "phone"]
+    laptop_engines = [e for e, s in zip(rt.engines, rt.streams)
+                      if s.tier == "laptop"]
+    assert len(phone_engines) == len(laptop_engines) == 3
+    assert all(e.tables is phone_engines[0].tables for e in phone_engines)
+    assert all(e.tables is laptop_engines[0].tables for e in laptop_engines)
+    assert phone_engines[0].tables is not laptop_engines[0].tables
+
+
+def test_tiers_drive_different_split_decisions():
+    """On a mid-speed link a phone-class device (4x slower) must offload at
+    least as much as a laptop-class one: its mean chosen split (device-side
+    layer count) is strictly smaller on at least one frame, never larger."""
+    prof, cfg = _profile(), _cfg(sla_s=10.0)
+    trace = bandwidth.NetworkTrace(np.full(10, 20e6), 0.005, "steady")
+    streams = [
+        fleet.StreamSpec(trace, 10, profile=workload.tier_profile(prof, "phone"),
+                         tier="phone"),
+        fleet.StreamSpec(trace, 10, profile=workload.tier_profile(prof, "laptop"),
+                         tier="laptop"),
+    ]
+    fs = fleet.FleetRuntime(prof, cfg, streams,
+                            cloud=fleet.CloudTierConfig(capacity=4,
+                                                        max_batch=1)).run()
+    splits_phone = [f.split for f in fs.per_stream[0].frames]
+    splits_laptop = [f.split for f in fs.per_stream[1].frames]
+    assert all(p <= l for p, l in zip(splits_phone, splits_laptop))
+    assert sum(splits_phone) < sum(splits_laptop)
+
+
+# ------------------------------------------------ open loop, admission, drops
+
+def test_open_loop_overload_reports_drops_not_unbounded_queueing():
+    prof, cfg = _profile(), _cfg(sla_s=0.5)
+    trace = bandwidth.NetworkTrace(np.full(50, 80e6), 0.002, "fast")
+    # 50 arrivals in 50 ms against ~10+ms frames, at most 2 in flight
+    arrivals = tuple(0.001 * i for i in range(50))
+    spec = fleet.StreamSpec(trace, 50, arrival_times=arrivals, max_inflight=2)
+    fs = fleet.FleetRuntime(prof, cfg, [spec],
+                            cloud=fleet.CloudTierConfig(capacity=1,
+                                                        max_batch=1)).run()
+    done = len(fs.per_stream[0].frames)
+    assert fs.dropped_per_stream == [50 - done]
+    assert 0 < done < 50
+    assert fs.drop_ratio == pytest.approx((50 - done) / 50)
+    assert fs.total_dropped > 0
+
+
+def test_open_loop_no_admission_bound_queues_instead_of_dropping():
+    prof, cfg = _profile(), _cfg(sla_s=0.5)
+    trace = bandwidth.NetworkTrace(np.full(20, 80e6), 0.002, "fast")
+    arrivals = tuple(0.001 * i for i in range(20))
+    spec = fleet.StreamSpec(trace, 20, arrival_times=arrivals)  # unbounded
+    fs = fleet.FleetRuntime(prof, cfg, [spec],
+                            cloud=fleet.CloudTierConfig(capacity=1,
+                                                        max_batch=1)).run()
+    assert len(fs.per_stream[0].frames) == 20
+    assert fs.total_dropped == 0 and fs.drop_ratio == 0.0
+    assert fs.avg_queue_s > 0.0   # overload shows up as queueing instead
+
+
+def test_open_loop_frames_serialize_on_the_client_device():
+    """Concurrent in-flight frames of one stream share one physical device:
+    simultaneous device-only arrivals complete back to back (latency k·d),
+    not all at d as if the client had unlimited hardware."""
+    prof, cfg = _profile(), _cfg(sla_s=10.0)
+    blocked = bandwidth.NetworkTrace(np.full(3, 1e3), 0.042, "blocked")
+    fs = fleet.FleetRuntime(
+        prof, cfg,
+        [fleet.StreamSpec(blocked, 3, arrival_times=(0.0, 0.0, 0.0))]).run()
+    frames = sorted(fs.per_stream[0].frames, key=lambda f: f.latency_s)
+    assert len(frames) == 3
+    assert all(f.split == prof.n_layers + 1 for f in frames)  # device-only
+    d = frames[0].latency_s
+    assert frames[0].queue_s == 0.0
+    assert frames[1].latency_s == pytest.approx(2 * d)
+    assert frames[2].latency_s == pytest.approx(3 * d)
+
+
+def test_open_loop_light_load_matches_arrival_spacing():
+    """Arrivals far apart: every frame admitted, latency has no queueing."""
+    prof, cfg = _profile(), _cfg(sla_s=5.0)
+    trace = bandwidth.NetworkTrace(np.full(5, 80e6), 0.002, "fast")
+    arrivals = tuple(1.0 * i for i in range(5))
+    fs = fleet.FleetRuntime(
+        prof, cfg,
+        [fleet.StreamSpec(trace, 5, arrival_times=arrivals, max_inflight=1)],
+        cloud=fleet.CloudTierConfig(capacity=2, max_batch=1)).run()
+    st = fs.per_stream[0]
+    assert len(st.frames) == 5 and fs.total_dropped == 0
+    assert st.avg_queue_s == 0.0
+    assert fs.horizon_s >= 4.0    # last frame starts at t=4
+
+
+# ----------------------------------------------------------- cloud autoscale
+
+def _burst_then_calm_streams(prof, n_streams=6, burst_n=20, calm_n=6):
+    trace = bandwidth.NetworkTrace(np.full(burst_n + calm_n, 80e6), 0.002, "fast")
+    arrivals = tuple([0.002 * i for i in range(burst_n)]
+                     + [0.5 + 0.4 * i for i in range(calm_n)])
+    return [fleet.StreamSpec(trace, burst_n + calm_n, arrival_times=arrivals,
+                             max_inflight=8)
+            for _ in range(n_streams)]
+
+
+def test_autoscaler_capacity_rises_under_burst_and_decays_after():
+    prof, cfg = _profile(), _cfg(sla_s=1.0)
+    streams = _burst_then_calm_streams(prof)
+    asc = fleet.AutoscaleConfig(min_capacity=1, max_capacity=6,
+                                interval_s=0.02, cooldown_s=0.0,
+                                high_util=0.5, low_util=0.1)
+    fs = fleet.FleetRuntime(prof, cfg, streams,
+                            cloud=fleet.CloudTierConfig(capacity=1,
+                                                        max_batch=1),
+                            autoscaler=asc).run()
+    assert fs.peak_capacity > 1, fs.capacity_timeline
+    assert fs.final_capacity < fs.peak_capacity, fs.capacity_timeline
+    assert fs.final_capacity >= 1
+    caps = [c for _, c in fs.capacity_timeline]
+    assert max(caps) <= 6 and min(caps) >= 1
+    # cost accounting: capacity-seconds sits between always-min and always-max
+    assert fs.horizon_s < fs.capacity_seconds < 6 * fs.horizon_s
+
+
+def test_autoscaler_fresh_per_run():
+    """run() is re-entrant: the controller's cooldown clock must not leak
+    from one run into the next (identical runs give identical timelines)."""
+    prof, cfg = _profile(), _cfg(sla_s=1.0)
+    streams = _burst_then_calm_streams(prof)
+    asc = fleet.AutoscaleConfig(min_capacity=1, max_capacity=6,
+                                interval_s=0.02, cooldown_s=0.1,
+                                high_util=0.5, low_util=0.1)
+    rt = fleet.FleetRuntime(prof, cfg, streams,
+                            cloud=fleet.CloudTierConfig(capacity=1,
+                                                        max_batch=1),
+                            autoscaler=asc)
+    fs1, fs2 = rt.run(), rt.run()
+    assert fs1.capacity_timeline == fs2.capacity_timeline
+    assert fs1.peak_capacity == fs2.peak_capacity > 1
+
+
+def test_autoscaler_static_without_config():
+    prof, cfg = _profile(), _cfg()
+    trace = bandwidth.synthetic_trace("4g", "driving", steps=6, seed=0)
+    fs = fleet.FleetRuntime(prof, cfg, [fleet.StreamSpec(trace, 6)]).run()
+    assert fs.capacity_timeline == [(0.0, fs.capacity)]
+    assert fs.peak_capacity == fs.final_capacity == fs.capacity
+    assert fs.capacity_seconds == pytest.approx(fs.capacity * fs.horizon_s)
+
+
+def test_autoscaler_decide_cooldown_and_clamps():
+    asc = fleet.Autoscaler(fleet.AutoscaleConfig(
+        min_capacity=2, max_capacity=4, interval_s=0.1, cooldown_s=1.0,
+        high_util=0.8, low_util=0.2))
+    assert asc.initial_capacity(1) == 2 and asc.initial_capacity(9) == 4
+    assert asc.decide(0.0, 1.0, 2) == 3          # scale up
+    assert asc.decide(0.5, 1.0, 3) == 3          # cooldown holds
+    assert asc.decide(1.5, 1.0, 4) == 4          # clamped at max
+    assert asc.decide(3.0, 0.0, 3) == 2          # scale down
+    assert asc.decide(5.0, 0.0, 2) == 2          # clamped at min
+
+
+def test_autoscale_config_validation():
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(min_capacity=0)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(min_capacity=4, max_capacity=2)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(interval_s=0.0)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(low_util=0.9, high_util=0.8)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(step=0)
+
+
+# ------------------------------------------------------ FleetStats edge cases
+
+def test_fleet_stats_zero_completed_frames_do_not_crash():
+    fs = fleet.FleetStats(per_stream=[RunStats([])], cloud_busy_s=0.0,
+                          horizon_s=0.0, capacity=4, batch_sizes=[])
+    assert fs.violation_ratio == 0.0
+    assert fs.p50_latency_s == 0.0 and fs.p99_latency_s == 0.0
+    assert fs.avg_latency_s == 0.0 and fs.avg_queue_s == 0.0
+    assert fs.aggregate_fps == 0.0 and fs.cloud_utilization == 0.0
+    assert fs.drop_ratio == 0.0 and fs.avg_batch_size == 0.0
+    st = fs.per_stream[0]
+    assert st.violation_ratio == 0.0 and st.avg_throughput_fps == 0.0
+    assert st.avg_accuracy == 0.0 and st.avg_deviation == 0.0
+
+
+def test_fleet_stats_all_dropped_stream():
+    """A stream that only ever completes its first admitted frame (the rest
+    dropped by admission) still aggregates cleanly."""
+    prof, cfg = _profile(), _cfg(sla_s=5.0)
+    trace = bandwidth.NetworkTrace(np.full(10, 80e6), 0.002, "fast")
+    arrivals = tuple(1e-6 * i for i in range(10))  # all at ~t=0
+    fs = fleet.FleetRuntime(
+        prof, cfg,
+        [fleet.StreamSpec(trace, 10, arrival_times=arrivals, max_inflight=1)],
+        cloud=fleet.CloudTierConfig(capacity=1, max_batch=1)).run()
+    assert len(fs.per_stream[0].frames) == 1
+    assert fs.dropped_per_stream == [9]
+    assert fs.drop_ratio == pytest.approx(0.9)
+    assert 0.0 <= fs.violation_ratio <= 1.0
+
+
+def test_fleet_stats_single_frame_aggregate_fps():
+    prof, cfg = _profile(), _cfg()
+    trace = bandwidth.NetworkTrace(np.full(1, 20e6), 0.01, "one")
+    fs = fleet.FleetRuntime(prof, cfg, [fleet.StreamSpec(trace, 1)]).run()
+    assert len(fs.all_frames) == 1
+    assert fs.aggregate_fps == pytest.approx(1.0 / fs.horizon_s)
+    assert fs.p50_latency_s == fs.p99_latency_s == fs.all_frames[0].latency_s
+
+
+# ------------------------------------------------------- WorkloadSpec + JSON
+
+def test_workload_spec_json_round_trip(tmp_path):
+    spec = workload.WorkloadSpec(
+        n_streams=3, n_frames=8, policy="janus", sla_ms=250.0, seed=5,
+        arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=30.0,
+                                        max_inflight=2),
+        tiers=("phone", "laptop"),
+        network=workload.NetworkConfig(network="wifi", mobility="static"),
+        capacity=2, max_batch=4,
+        autoscale=fleet.AutoscaleConfig(max_capacity=8),
+        name="round-trip")
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps(spec.to_dict()))
+    loaded = workload.WorkloadSpec.from_json(str(p))
+    assert loaded == spec
+
+
+def test_workload_spec_rejects_unknown_keys_and_tiers():
+    with pytest.raises(ValueError, match="unknown workload keys"):
+        workload.WorkloadSpec.from_dict({"n_streams": 2, "typo_key": 1})
+    with pytest.raises(ValueError, match="unknown arrivals keys"):
+        workload.WorkloadSpec.from_dict({"arrivals": {"kindd": "poisson"}})
+    with pytest.raises(ValueError, match="unknown device tier"):
+        workload.WorkloadSpec(tiers=("quantum",))
+
+
+def test_workload_spec_cloud_overrides():
+    spec = workload.WorkloadSpec(n_streams=16, max_wait_ms=2.0, capacity=3)
+    cloud = spec.cloud_config()
+    assert cloud.capacity == 3 and cloud.max_wait_s == pytest.approx(0.002)
+    assert cloud.max_batch == fleet.default_cloud_config(16).max_batch
+    defaults = workload.WorkloadSpec(n_streams=16).cloud_config()
+    assert defaults == fleet.default_cloud_config(16)
+
+
+# ----------------------------------------------- closed-loop spec regression
+
+def test_closed_loop_spec_reproduces_plain_fleet_exactly():
+    """Acceptance: a closed-loop WorkloadSpec (uniform tier, synthetic traces,
+    no autoscaling) is today's FleetRuntime, frame for frame."""
+    prof, cfg = _profile(), _cfg()
+    spec = workload.WorkloadSpec(n_streams=4, n_frames=15, seed=11)
+    rt = workload.build_runtime(spec, prof, cfg)
+    # the spec added no workload machinery to the streams...
+    for s in rt.streams:
+        assert s.arrival_times is None and s.max_inflight == 0
+        assert s.profile is None
+    fs_spec = rt.run()
+    # ...and a hand-built fleet on the same traces matches exactly
+    plain = [fleet.StreamSpec(trace=s.trace, n_frames=s.n_frames)
+             for s in rt.streams]
+    fs_plain = fleet.FleetRuntime(prof, cfg, plain,
+                                  cloud=spec.cloud_config()).run()
+    assert fs_spec.total_dropped == 0
+    for st_s, st_p in zip(fs_spec.per_stream, fs_plain.per_stream):
+        np.testing.assert_array_equal([f.latency_s for f in st_s.frames],
+                                      [f.latency_s for f in st_p.frames])
+        assert [f.split for f in st_s.frames] == \
+            [f.split for f in st_p.frames]
+        assert [f.alpha for f in st_s.frames] == \
+            [f.alpha for f in st_p.frames]
+    assert fs_spec.violation_ratio == fs_plain.violation_ratio
+    assert fs_spec.cloud_utilization == fs_plain.cloud_utilization
+
+
+def test_spec_n1_closed_loop_reproduces_single_stream_engine():
+    """The workload layer keeps the N=1 bit-identity with JanusEngine."""
+    prof, cfg = _profile(), _cfg()
+    spec = workload.WorkloadSpec(n_streams=1, n_frames=25, seed=2,
+                                 max_batch=1)
+    rt = workload.build_runtime(spec, prof, cfg)
+    fs = rt.run()
+    st_engine = engine.JanusEngine(prof, cfg).run_trace(
+        rt.streams[0].trace, 25, "janus")
+    np.testing.assert_allclose(
+        [f.latency_s for f in fs.per_stream[0].frames],
+        [f.latency_s for f in st_engine.frames])
+
+
+def test_replace_spec_toggles_autoscale():
+    """dataclasses.replace works on specs (used for frontier comparisons)."""
+    spec = workload.WorkloadSpec(
+        n_streams=2, n_frames=4,
+        autoscale=fleet.AutoscaleConfig(max_capacity=4))
+    static = dataclasses.replace(spec, autoscale=None)
+    assert static.autoscale is None and static.n_streams == 2
