@@ -1,15 +1,17 @@
 # Janus reproduction — developer/CI entry points.
 #
-#   make test           fast tier (pytest -m "not slow"; the CI gate)
-#   make test-all       full tier-1 suite
-#   make bench-planner  per-decision planner bench -> BENCH_planner.json
-#   make bench-workload workload-scenario sweep smoke -> BENCH_workload.json
-#   make ci             what .github/workflows/ci.yml runs
+#   make test             fast tier (pytest -m "not slow"; the CI gate)
+#   make test-all         full tier-1 suite
+#   make lint             ruff over the serving stack + benchmarks
+#   make bench-planner    per-decision planner bench -> BENCH_planner.json
+#   make bench-workload   workload-scenario sweep smoke -> BENCH_workload.json
+#   make check-regression fresh BENCH artifacts vs benchmarks/baselines/
+#   make ci               what .github/workflows/ci.yml runs
 
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-all bench-planner bench-workload ci
+.PHONY: test test-all lint bench-planner bench-workload check-regression ci
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -17,10 +19,20 @@ test:
 test-all:
 	python -m pytest -x -q
 
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src/repro/serving benchmarks; \
+	else \
+		echo "ruff not installed; skipping lint (CI installs it)"; \
+	fi
+
 bench-planner:
 	python benchmarks/planner_bench.py --out BENCH_planner.json
 
 bench-workload:
 	python benchmarks/workload_bench.py --smoke --out BENCH_workload.json
 
-ci: test bench-planner bench-workload
+check-regression:
+	python benchmarks/check_regression.py
+
+ci: lint test bench-planner bench-workload check-regression

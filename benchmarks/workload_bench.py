@@ -12,15 +12,34 @@ run at several fleet sizes on the paper's ViT-L@384 profile:
                               autoscaler: capacity rises under the burst and
                               decays after it (the capacity timeline is in the
                               artifact), trading capacity-seconds for SLA
+  * ``mmpp-burst-reactive`` — the same bursts with a deeper admission bound
+                              (overload queues instead of dropping) on the
+                              utilization-driven autoscaler: violation ratio
+                              now measures the controller's reaction lag
+  * ``mmpp-burst-predictive``— that same load with the *predictive* (EWMA
+                              arrival-rate forecast) autoscaler: the
+                              reactive-vs-predictive cell of the frontier
   * ``tiered``              — heterogeneous phone/jetson/laptop device tiers
+  * ``sla-mix-fifo``        — interactive/standard/batch SLA classes at equal
+                              load through the classic FIFO micro-batcher
+                              (tight-SLA streams queue behind batch traffic)
+  * ``sla-mix-priority``    — the same mixed-class load through the priority
+                              micro-batcher (deadline-aware class admission):
+                              the interactive class's violation ratio must sit
+                              strictly below its FIFO cell
 
-Rows record drop ratio, violation ratio, p50/p99 latency, queueing delay,
-cloud utilization, capacity peak/final, and capacity-seconds — the static-vs-
-autoscale pair at equal load is the SLA-vs-capacity-seconds cost frontier.
-Emits ``BENCH_workload.json``.
+Rows record drop ratio, violation ratio, per-SLA-class ratios/percentiles,
+p50/p99 latency, queueing delay, cloud utilization, capacity peak/final, and
+capacity-seconds. Three artifact sections pair cells at equal load:
+``sla_vs_capacity_frontier`` (static vs autoscaled), ``priority_vs_fifo``
+(FIFO vs priority admission, per class), and ``reactive_vs_predictive``
+(utilization vs forecast autoscaling). Emits ``BENCH_workload.json``, the
+baseline for the CI perf-regression gate (``benchmarks/check_regression.py``).
 
   PYTHONPATH=src python benchmarks/workload_bench.py --out BENCH_workload.json
   PYTHONPATH=src python benchmarks/workload_bench.py --smoke   # CI, seconds
+  PYTHONPATH=src python benchmarks/workload_bench.py --smoke \
+      --scenarios sla-mix-fifo,sla-mix-priority   # pin a stable subset
 """
 from __future__ import annotations
 
@@ -40,6 +59,18 @@ _BURST_ARRIVALS = dict(kind="mmpp", rate_fps=2.0, burst_rate_fps=60.0,
                        p_burst=0.10, p_calm=0.05, max_inflight=4)
 _AUTOSCALE = dict(min_capacity=1, max_capacity=8, interval_s=0.25,
                   cooldown_s=0.25, high_util=0.70, low_util=0.25)
+# reactive-vs-predictive pair: same bursts but a deeper admission bound
+# (max_inflight=12) so burst overload queues instead of dropping — the
+# violation ratio then measures the controller's reaction lag directly
+_LAG_ARRIVALS = dict(_BURST_ARRIVALS, max_inflight=12)
+_PREDICTIVE = dict(min_capacity=1, max_capacity=8, interval_s=0.10,
+                   cooldown_s=0.10, policy="predictive",
+                   lookahead_s=0.3, ewma_alpha=0.5)
+# mixed-SLA-class load: sustained open-loop Poisson holding one executor at
+# ~75% utilization — enough queueing that FIFO admission parks tight-SLA
+# interactive frames behind batch traffic, short of outright collapse
+_MIX_ARRIVALS = dict(kind="poisson", rate_fps=5.0, max_inflight=6)
+_MIX_CLASSES = ("interactive", "standard", "batch")
 
 
 def scenario_spec(name: str, n_streams: int, frames: int,
@@ -62,14 +93,36 @@ def scenario_spec(name: str, n_streams: int, frames: int,
             **base, network=wifi, capacity=1, max_batch=4,
             arrivals=workload.ArrivalConfig(**_BURST_ARRIVALS),
             autoscale=fleet.AutoscaleConfig(**_AUTOSCALE))
+    if name == "mmpp-burst-reactive":
+        return workload.WorkloadSpec(
+            **base, network=wifi, capacity=1, max_batch=4,
+            arrivals=workload.ArrivalConfig(**_LAG_ARRIVALS),
+            autoscale=fleet.AutoscaleConfig(**_AUTOSCALE))
+    if name == "mmpp-burst-predictive":
+        return workload.WorkloadSpec(
+            **base, network=wifi, capacity=1, max_batch=4,
+            arrivals=workload.ArrivalConfig(**_LAG_ARRIVALS),
+            autoscale=fleet.AutoscaleConfig(**_PREDICTIVE))
     if name == "tiered":
         return workload.WorkloadSpec(**base,
                                      tiers=("phone", "jetson", "laptop"))
+    if name in ("sla-mix-fifo", "sla-mix-priority"):
+        return workload.WorkloadSpec(
+            # one executor per ~8 streams keeps the tier near the same
+            # contention level at every sweep size (instead of collapsing
+            # at N=16 where ordering can no longer matter)
+            **base, network=wifi, capacity=max(1, n_streams // 8),
+            max_batch=4,
+            arrivals=workload.ArrivalConfig(**_MIX_ARRIVALS),
+            sla_classes=_MIX_CLASSES,
+            priority=(name == "sla-mix-priority"))
     raise ValueError(f"unknown scenario {name!r}")
 
 
 SCENARIOS = ("closed-baseline", "poisson-overload", "mmpp-burst-static",
-             "mmpp-burst-autoscale", "tiered")
+             "mmpp-burst-autoscale", "mmpp-burst-reactive",
+             "mmpp-burst-predictive", "tiered",
+             "sla-mix-fifo", "sla-mix-priority")
 
 
 def bench_cell(profile, scenario: str, n_streams: int, frames: int,
@@ -86,7 +139,10 @@ def bench_cell(profile, scenario: str, n_streams: int, frames: int,
         "frames_per_stream": frames,
         "arrivals": spec.arrivals.kind,
         "tiers": list(spec.tiers),
+        "sla_classes": list(spec.sla_classes),
+        "priority": rt.priority,
         "autoscale": spec.autoscale is not None,
+        "autoscale_policy": spec.autoscale.policy if spec.autoscale else None,
         "completed_frames": len(fs.all_frames),
         "drop_ratio": fs.drop_ratio,
         "violation_ratio": fs.violation_ratio,
@@ -101,6 +157,14 @@ def bench_cell(profile, scenario: str, n_streams: int, frames: int,
         "horizon_s": fs.horizon_s,
         "sim_wall_s": wall_s,
     }
+    if len(fs.per_class) > 1:
+        row["per_class"] = {
+            name: {"frames": cs.frames,
+                   "violation_ratio": cs.violation_ratio,
+                   "drop_ratio": cs.drop_ratio,
+                   "p50_latency_ms": cs.p50_latency_s * 1e3,
+                   "p99_latency_ms": cs.p99_latency_s * 1e3}
+            for name, cs in fs.per_class.items()}
     if spec.autoscale is not None:
         row["capacity_timeline"] = [[t, c] for t, c in fs.capacity_timeline]
     return row
@@ -126,6 +190,52 @@ def frontier(rows: list[dict]) -> list[dict]:
                            "capacity_seconds": r["capacity_seconds"]},
         })
     return out
+
+
+def _cell(row: dict) -> dict:
+    cell = {"violation_ratio": row["violation_ratio"],
+            "drop_ratio": row["drop_ratio"],
+            "p99_latency_ms": row["p99_latency_ms"],
+            "capacity_seconds": row["capacity_seconds"]}
+    if "per_class" in row:
+        cell["per_class"] = {
+            name: {"violation_ratio": c["violation_ratio"],
+                   "drop_ratio": c["drop_ratio"],
+                   "p99_latency_ms": c["p99_latency_ms"]}
+            for name, c in row["per_class"].items()}
+    return cell
+
+
+def _paired(rows: list[dict], scenario_a: str, scenario_b: str,
+            key_a: str, key_b: str) -> list[dict]:
+    """Equal-load comparison cells: for every fleet size where both
+    scenarios ran, pair their rows as {streams, key_a: cell, key_b: cell}."""
+    by_key = {(r["scenario"], r["streams"]): r for r in rows}
+    out = []
+    for (scenario, n), rb in sorted(by_key.items()):
+        if scenario != scenario_b:
+            continue
+        ra = by_key.get((scenario_a, n))
+        if ra is None:
+            continue
+        out.append({"streams": n, key_a: _cell(ra), key_b: _cell(rb)})
+    return out
+
+
+def priority_vs_fifo(rows: list[dict]) -> list[dict]:
+    """Priority admission vs FIFO at equal mixed-class load: the headline
+    cell is the interactive class's violation ratio, which priority
+    admission must hold strictly below the FIFO cell."""
+    return _paired(rows, "sla-mix-fifo", "sla-mix-priority",
+                   "fifo", "priority")
+
+
+def reactive_vs_predictive(rows: list[dict]) -> list[dict]:
+    """Utilization (reactive) vs EWMA-forecast (predictive) autoscaling on
+    the same bursty load: predictive should buy a lower violation ratio at
+    comparable capacity-seconds by cutting the reaction lag."""
+    return _paired(rows, "mmpp-burst-reactive", "mmpp-burst-predictive",
+                   "reactive", "predictive")
 
 
 def run_sweep(streams: list[int], frames: int, sla_ms: float, seed: int,
@@ -162,6 +272,19 @@ def rows():
     return out
 
 
+def parse_scenarios(arg: str):
+    """``--scenarios a,b`` -> validated tuple (empty/``all`` = every one).
+    The CI smoke and the regression gate use this to pin a stable subset."""
+    if not arg or arg == "all":
+        return SCENARIOS
+    picked = tuple(s.strip() for s in arg.split(",") if s.strip())
+    unknown = [s for s in picked if s not in SCENARIOS]
+    if unknown:
+        raise SystemExit(f"unknown scenario(s) {unknown}; "
+                         f"known: {list(SCENARIOS)}")
+    return picked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, nargs="+", default=[4, 8, 16])
@@ -170,20 +293,27 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sweep (one fleet size, few frames)")
+    ap.add_argument("--scenarios", default="all",
+                    help="comma-separated scenario subset to run "
+                         f"(default all: {','.join(SCENARIOS)})")
     ap.add_argument("--out", default="BENCH_workload.json")
     args = ap.parse_args(argv)
 
+    scenarios = parse_scenarios(args.scenarios)
     streams = [8] if args.smoke else args.streams
     frames = 40 if args.smoke else args.frames
-    bench_rows = run_sweep(streams, frames, args.sla_ms, args.seed)
+    bench_rows = run_sweep(streams, frames, args.sla_ms, args.seed,
+                           scenarios=scenarios)
 
     artifact = {
         "benchmark": "workload_bench",
         "config": {"streams": streams, "frames": frames,
                    "sla_ms": args.sla_ms, "seed": args.seed,
-                   "smoke": args.smoke},
+                   "smoke": args.smoke, "scenarios": list(scenarios)},
         "rows": bench_rows,
         "sla_vs_capacity_frontier": frontier(bench_rows),
+        "priority_vs_fifo": priority_vs_fifo(bench_rows),
+        "reactive_vs_predictive": reactive_vs_predictive(bench_rows),
     }
     with open(args.out, "w") as f:
         json.dump(artifact, f, indent=2)

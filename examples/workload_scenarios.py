@@ -1,14 +1,20 @@
 """Workload-scenario tour: the declarative layer over the fleet runtime.
 
-Four scenarios on the paper's ViT-L@384 timing profile:
+Six scenarios on the paper's ViT-L@384 timing profile:
 
   1. closed loop (the classic fleet — regression anchor),
   2. open-loop Poisson overload with admission control (drops, not queues),
   3. heterogeneous phone/jetson/laptop device tiers,
   4. a bursty MMPP fleet with cloud autoscaling (capacity follows load),
+  5. mixed SLA classes (interactive/standard/batch) with priority
+     deadline-aware micro-batching and per-class stats,
+  6. diurnal (day-cycle) arrivals with *predictive* (EWMA-forecast)
+     autoscaling,
 
-then the same autoscale scenario loaded from a JSON ``WorkloadSpec`` via the
-serving CLI's ``--workload`` flag.
+then a priority + predictive scenario loaded from a JSON ``WorkloadSpec``
+via the serving CLI's ``--workload`` flag. The full JSON schema — including
+``sla_class`` assignment, custom ``sla_class_defs``, and diurnal /
+rate-trace arrival schedules — is documented in ``docs/workload_spec.md``.
 
     PYTHONPATH=src python examples/workload_scenarios.py
 """
@@ -42,15 +48,33 @@ serve.main(["--streams", "8", "--network", "wifi", "--mobility", "static",
             "--max-inflight", "4", "--capacity", "1",
             "--autoscale", "--autoscale-max", "8", *BASE])
 
-print("\n=== 5. the same autoscale scenario as a JSON WorkloadSpec ===")
+print("\n=== 5. SLA classes: priority micro-batching + per-class stats ===")
+serve.main(["--streams", "8", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "poisson", "--rate-fps", "5", "--max-inflight", "6",
+            "--sla-classes", "interactive", "standard", "batch",
+            "--capacity", "1", "--max-batch", "4", *BASE])
+
+print("\n=== 6. diurnal arrivals + predictive autoscaling ===")
+serve.main(["--streams", "8", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "diurnal", "--rate-fps", "6",
+            "--diurnal-period-s", "4", "--diurnal-amplitude", "0.9",
+            "--max-inflight", "8", "--capacity", "1",
+            "--autoscale", "--autoscale-policy", "predictive",
+            "--autoscale-max", "8", *BASE])
+
+print("\n=== 7. priority + predictive, as a JSON WorkloadSpec ===")
 spec = {
-    "name": "burst-autoscale-demo",
+    "name": "classes-predictive-demo",
     "n_streams": 8, "n_frames": 30, "sla_ms": 300.0, "seed": 3,
     "network": {"network": "wifi", "mobility": "static"},
     "arrivals": {"kind": "mmpp", "rate_fps": 2.0, "burst_rate_fps": 60.0,
                  "max_inflight": 4},
+    "sla_classes": ["interactive", "standard", "batch"],
+    "sla_class_defs": {"interactive": {"sla_multiplier": 0.6}},
     "capacity": 1,
-    "autoscale": {"min_capacity": 1, "max_capacity": 8},
+    "autoscale": {"min_capacity": 1, "max_capacity": 8,
+                  "policy": "predictive", "interval_s": 0.1,
+                  "cooldown_s": 0.1, "lookahead_s": 0.3},
 }
 with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
     json.dump(spec, f)

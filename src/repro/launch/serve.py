@@ -27,12 +27,17 @@ loop).
 
 Workload scenarios (``repro.serving.workload``): ``--workload spec.json``
 loads a full declarative scenario; the shorthands compose one from flags —
-``--arrivals poisson|mmpp`` + ``--rate-fps`` (open-loop arrivals with
-``--max-inflight`` admission control; overload reports a drop ratio),
-``--tiers phone jetson laptop`` (heterogeneous device tiers, round-robin),
-``--trace-csv FILE_OR_DIR`` (real-trace replay instead of synthetic Markov
-traces), and ``--autoscale`` (+ ``--autoscale-min/max``: utilization-driven
-cloud capacity scaling, reported as a capacity timeline / capacity-seconds).
+``--arrivals poisson|mmpp|diurnal`` + ``--rate-fps`` (open-loop arrivals with
+``--max-inflight`` admission control; overload reports a drop ratio;
+``diurnal`` adds a sinusoidal day-cycle rate), ``--tiers phone jetson
+laptop`` (heterogeneous device tiers, round-robin), ``--sla-classes
+interactive standard batch`` (per-stream SLA classes, round-robin: scaled
+SLA budgets + priority deadline-aware micro-batching in the shared tier,
+per-class stats in the report), ``--trace-csv FILE_OR_DIR`` (real-trace
+replay instead of synthetic Markov traces), and ``--autoscale`` (+
+``--autoscale-min/max``, ``--autoscale-policy utilization|predictive``:
+reactive or forecast-driven cloud capacity scaling, reported as a capacity
+timeline / capacity-seconds).
 
 Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
@@ -49,10 +54,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import bandwidth, engine, planner, profiler, pruning, scheduler
+from repro.core import bandwidth, engine, planner, profiler, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
 from repro.serving import fleet as fleet_lib
+from repro.serving import sla as sla_lib
 from repro.serving import workload as workload_lib
 
 
@@ -79,7 +85,9 @@ def spec_from_args(args) -> workload_lib.WorkloadSpec:
     arrivals = workload_lib.ArrivalConfig(
         kind=args.arrivals, rate_fps=args.rate_fps,
         burst_rate_fps=args.burst_rate_fps, period_s=args.period_ms / 1e3,
-        max_inflight=args.max_inflight)
+        max_inflight=args.max_inflight,
+        diurnal_period_s=args.diurnal_period_s,
+        diurnal_amplitude=args.diurnal_amplitude)
     if args.trace_csv:
         network = workload_lib.NetworkConfig(kind="csv", path=args.trace_csv,
                                              rtt_ms=args.trace_rtt_ms)
@@ -89,11 +97,13 @@ def spec_from_args(args) -> workload_lib.WorkloadSpec:
     autoscale = None
     if args.autoscale:
         autoscale = fleet_lib.AutoscaleConfig(min_capacity=args.autoscale_min,
-                                              max_capacity=args.autoscale_max)
+                                              max_capacity=args.autoscale_max,
+                                              policy=args.autoscale_policy)
     return workload_lib.WorkloadSpec(
         n_streams=args.streams, n_frames=args.frames, policy=args.policy,
         sla_ms=args.sla_ms, seed=args.seed, arrivals=arrivals,
-        tiers=tuple(args.tiers), network=network,
+        tiers=tuple(args.tiers), sla_classes=tuple(args.sla_classes),
+        network=network,
         capacity=args.capacity or None, max_batch=args.max_batch or None,
         max_wait_ms=args.batch_wait_ms, autoscale=autoscale)
 
@@ -112,16 +122,27 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
           f"cloud(capacity={cloud.capacity} max_batch={cloud.max_batch} "
           f"wait={cloud.max_wait_s*1e3:.1f}ms"
           f"{' autoscale' if spec.autoscale else ''})")
-    print(f"{'stream':>6s} {'tier':8s} {'trace':24s} {'viol%':>6s} "
-          f"{'p50_ms':>8s} {'p99_ms':>9s} {'queue_ms':>9s} {'drop%':>6s}")
+    print(f"{'stream':>6s} {'class':12s} {'tier':8s} {'trace':24s} "
+          f"{'viol%':>6s} {'p50_ms':>8s} {'p99_ms':>9s} {'queue_ms':>9s} "
+          f"{'drop%':>6s}")
     for si, st in enumerate(fs.per_stream):
         spec_si = rt.streams[si]
         offered = len(st.frames) + fs.dropped_per_stream[si]
         drop = fs.dropped_per_stream[si] / offered if offered else 0.0
-        print(f"{si:6d} {spec_si.tier or 'uniform':8s} "
+        print(f"{si:6d} {spec_si.sla_class:12s} {spec_si.tier or 'uniform':8s} "
               f"{spec_si.trace.name[:24]:24s} {100*st.violation_ratio:6.1f} "
               f"{st.p50_latency_s*1e3:8.1f} {st.p99_latency_s*1e3:9.1f} "
               f"{st.avg_queue_s*1e3:9.2f} {100*drop:6.1f}")
+    if len(fs.per_class) > 1:
+        print(f"[fleet per-class] admission="
+              f"{'priority' if rt.priority else 'fifo'}")
+        for name, cs in fs.per_class.items():
+            print(f"  {name:12s} frames={cs.frames:5d} "
+                  f"viol%={100*cs.violation_ratio:5.1f} "
+                  f"p50={cs.p50_latency_s*1e3:7.1f}ms "
+                  f"p99={cs.p99_latency_s*1e3:8.1f}ms "
+                  f"queue={cs.avg_queue_s*1e3:7.2f}ms "
+                  f"drop%={100*cs.drop_ratio:5.1f}")
     print(f"[fleet aggregate] frames={len(fs.all_frames)} "
           f"viol%={100*fs.violation_ratio:.1f} p50={fs.p50_latency_s*1e3:.1f}ms "
           f"p99={fs.p99_latency_s*1e3:.1f}ms queue={fs.avg_queue_s*1e3:.2f}ms "
@@ -165,27 +186,43 @@ def main(argv=None):
                     help="fleet mode: JSON WorkloadSpec scenario (overrides "
                          "the shorthand workload flags below)")
     ap.add_argument("--arrivals", default="closed",
-                    choices=["closed", "poisson", "mmpp"],
+                    choices=["closed", "poisson", "mmpp", "diurnal"],
                     help="per-stream arrival process (open-loop kinds drop "
-                         "overload arrivals when --max-inflight is set)")
+                         "overload arrivals when --max-inflight is set; "
+                         "'trace' schedules need a JSON --workload spec)")
     ap.add_argument("--rate-fps", type=float, default=10.0,
-                    help="open-loop arrival rate (poisson / mmpp calm state)")
+                    help="open-loop arrival rate (poisson / mmpp calm state "
+                         "/ diurnal mean)")
     ap.add_argument("--burst-rate-fps", type=float, default=40.0,
                     help="mmpp burst-state arrival rate")
+    ap.add_argument("--diurnal-period-s", type=float, default=60.0,
+                    help="diurnal arrivals: day-cycle period (compressed)")
+    ap.add_argument("--diurnal-amplitude", type=float, default=0.8,
+                    help="diurnal arrivals: rate swing in [0, 1]")
     ap.add_argument("--max-inflight", type=int, default=0,
                     help="per-stream admission bound (0 = unbounded)")
     ap.add_argument("--tiers", nargs="+", default=["uniform"],
                     help="device tiers assigned round-robin to streams "
                          f"(known: {sorted(workload_lib.DEVICE_TIERS)})")
+    ap.add_argument("--sla-classes", nargs="+", default=["standard"],
+                    help="SLA classes assigned round-robin to streams "
+                         f"(known: {sorted(sla_lib.DEFAULT_SLA_CLASSES)}); "
+                         "more than one class enables priority "
+                         "micro-batching in the shared cloud tier")
     ap.add_argument("--trace-csv", default="",
                     help="replay real network traces: one CSV file (shared) "
                          "or a directory of *.csv (round-robin per stream)")
     ap.add_argument("--trace-rtt-ms", type=float, default=42.2,
                     help="RTT to pair with --trace-csv traces")
     ap.add_argument("--autoscale", action="store_true",
-                    help="utilization-driven cloud capacity scaling")
+                    help="dynamic cloud capacity scaling (see "
+                         "--autoscale-policy)")
     ap.add_argument("--autoscale-min", type=int, default=1)
     ap.add_argument("--autoscale-max", type=int, default=16)
+    ap.add_argument("--autoscale-policy", default="utilization",
+                    choices=list(fleet_lib.AUTOSCALE_POLICIES),
+                    help="reactive windowed utilization (default) or "
+                         "predictive EWMA arrival-rate forecasting")
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
@@ -198,6 +235,7 @@ def main(argv=None):
             ("--arrivals", args.arrivals != "closed"),
             ("--max-inflight", args.max_inflight != 0),
             ("--tiers", args.tiers != ["uniform"]),
+            ("--sla-classes", args.sla_classes != ["standard"]),
             ("--trace-csv", bool(args.trace_csv)),
             ("--autoscale", args.autoscale),
         ] if used]

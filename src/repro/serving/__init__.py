@@ -1,19 +1,25 @@
-"""Serving tier: request batching (``batcher``), the multi-stream fleet
-runtime (``fleet``), and declarative workload scenarios (``workload``)."""
+"""Serving tier: request batching (``batcher``), SLA classes (``sla``), the
+multi-stream fleet runtime (``fleet``), and declarative workload scenarios
+(``workload``)."""
 from repro.serving.batcher import (ContinuousBatcher, KVSlotManager,
-                                   MicroBatcher, Request)
-from repro.serving.fleet import (AutoscaleConfig, Autoscaler, CloudTierConfig,
-                                 FleetRuntime, FleetStats, StreamSpec,
-                                 default_cloud_config)
+                                   MicroBatcher, PriorityMicroBatcher,
+                                   Request)
+from repro.serving.fleet import (AutoscaleConfig, Autoscaler, ClassStats,
+                                 CloudTierConfig, FleetRuntime, FleetStats,
+                                 StreamSpec, default_cloud_config)
+from repro.serving.sla import (DEFAULT_SLA_CLASSES, SlaClass,
+                               resolve_sla_class)
 from repro.serving.workload import (ArrivalConfig, DeviceTier, DEVICE_TIERS,
                                     NetworkConfig, WorkloadSpec,
                                     arrival_times, build_runtime,
                                     stream_seeds, tier_profile)
 
 __all__ = [
-    "ContinuousBatcher", "KVSlotManager", "MicroBatcher", "Request",
-    "AutoscaleConfig", "Autoscaler", "CloudTierConfig", "FleetRuntime",
-    "FleetStats", "StreamSpec", "default_cloud_config",
+    "ContinuousBatcher", "KVSlotManager", "MicroBatcher",
+    "PriorityMicroBatcher", "Request",
+    "AutoscaleConfig", "Autoscaler", "ClassStats", "CloudTierConfig",
+    "FleetRuntime", "FleetStats", "StreamSpec", "default_cloud_config",
+    "DEFAULT_SLA_CLASSES", "SlaClass", "resolve_sla_class",
     "ArrivalConfig", "DeviceTier", "DEVICE_TIERS", "NetworkConfig",
     "WorkloadSpec", "arrival_times", "build_runtime", "stream_seeds",
     "tier_profile",

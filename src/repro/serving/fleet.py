@@ -59,10 +59,22 @@ Workload hooks (driven declaratively by ``repro.serving.workload``):
     client plans against phone-class device latencies. Tier profiles are
     value-equal per tier, so ``planner.tables_for`` shares one planner-tables
     instance per *tier*, not per stream.
-  * **cloud autoscaling** — an ``Autoscaler`` samples windowed utilization of
-    the shared tier every ``interval_s`` and grows/shrinks the executor count
-    between ``min_capacity``/``max_capacity`` (with cooldown); the capacity
-    timeline and capacity-seconds cost land in ``FleetStats``.
+  * **cloud autoscaling** — an ``Autoscaler`` samples the shared tier every
+    ``interval_s`` and grows/shrinks the executor count between
+    ``min_capacity``/``max_capacity`` (with cooldown), either reactively from
+    windowed utilization or predictively from an EWMA arrival-rate forecast
+    (``AutoscaleConfig.policy="predictive"``); the capacity timeline and
+    capacity-seconds cost land in ``FleetStats``.
+  * **SLA classes** — each stream names an ``SlaClass``
+    (``repro.serving.sla``): the class scales the stream's SLA budget, and a
+    fleet with more than one class (or ``priority=True``) swaps the FIFO
+    micro-batcher for ``PriorityMicroBatcher`` — admission ordered by (aged
+    class priority, deadline slack), per-class deadline windows, preemptive
+    lane draining — so tight-SLA interactive frames stop queueing behind
+    batch traffic exactly when the network degrades. ``FleetStats.per_class``
+    reports per-class violation/drop ratios and latency percentiles. An
+    all-default-class fleet keeps the FIFO batcher and reproduces the
+    classic runtime bit for bit.
 """
 from __future__ import annotations
 
@@ -79,7 +91,8 @@ from repro.core.engine import (CompiledPlanCache, EngineConfig, FrameResult,
                                run_cloud_batch)
 from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import ModelProfile
-from repro.serving.batcher import MicroBatcher, Request
+from repro.serving import sla as sla_lib
+from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +110,9 @@ class StreamSpec:
     # in-flight frames (0 = unbounded; closed loop never exceeds 1)
     profile: ModelProfile | None = None  # device-tier override (None = fleet-wide)
     tier: str = ""               # tier label for reporting only
+    sla_class: str = sla_lib.DEFAULT_CLASS
+    # SLA class (repro.serving.sla): scales the stream's SLA budget and
+    # drives priority admission in the shared tier's micro-batcher
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,15 +149,33 @@ def default_cloud_config(n_streams: int) -> CloudTierConfig:
     return CloudTierConfig(capacity=capacity, max_batch=max_batch)
 
 
+AUTOSCALE_POLICIES = ("utilization", "predictive")
+
+
 @dataclasses.dataclass(frozen=True)
 class AutoscaleConfig:
-    """Utilization-driven scaling of the shared tier's executor count.
+    """Scaling policy for the shared tier's executor count.
 
-    Every ``interval_s`` the runtime samples windowed utilization (cloud busy
-    seconds dispatched in the window / ``capacity * interval_s``) and grows by
-    ``step`` above ``high_util``, shrinks by ``step`` below ``low_util``,
-    clamped to [``min_capacity``, ``max_capacity``]; after a change no further
-    change happens for ``cooldown_s``."""
+    ``policy="utilization"`` (reactive, the default): every ``interval_s``
+    the runtime samples windowed utilization (cloud busy seconds dispatched
+    in the window / ``capacity * interval_s``) and grows by ``step`` above
+    ``high_util``, shrinks by ``step`` below ``low_util``, clamped to
+    [``min_capacity``, ``max_capacity``]; after a change no further change
+    happens for ``cooldown_s``.
+
+    ``policy="predictive"`` (queue-depth feed-forward): every ``interval_s``
+    the runtime updates an EWMA (``ewma_alpha``) of the cloud-bound arrival
+    rate and of per-frame cloud service time, then provisions for the
+    forecast work over the next ``lookahead_s`` —
+
+        target = ceil((backlog_s + rate * lookahead_s * service_s)
+                      / lookahead_s)
+
+    where ``backlog_s`` is the service already queued or running. The
+    controller jumps straight to the clamped target (no ``step`` limit):
+    the point of forecasting is to cut the reaction lag a step-limited
+    utilization controller pays climbing through intermediate capacities.
+    """
     min_capacity: int = 1
     max_capacity: int = 16
     interval_s: float = 0.25
@@ -149,6 +183,9 @@ class AutoscaleConfig:
     high_util: float = 0.85
     low_util: float = 0.30
     step: int = 1
+    policy: str = "utilization"
+    lookahead_s: float = 0.5     # predictive: provisioning horizon
+    ewma_alpha: float = 0.4      # predictive: forecast smoothing (0, 1]
 
     def __post_init__(self):
         if self.min_capacity < 1:
@@ -163,14 +200,25 @@ class AutoscaleConfig:
                              f"{self.low_util} / {self.high_util}")
         if self.step < 1:
             raise ValueError(f"step must be >= 1, got {self.step}")
+        if self.policy not in AUTOSCALE_POLICIES:
+            raise ValueError(f"policy must be one of {AUTOSCALE_POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.lookahead_s <= 0:
+            raise ValueError(f"lookahead_s must be > 0, got {self.lookahead_s}")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {self.ewma_alpha}")
 
 
 class Autoscaler:
-    """Stateful controller for one fleet run (tracks the cooldown clock)."""
+    """Stateful controller for one fleet run (tracks the cooldown clock and,
+    for the predictive policy, the EWMA forecast state)."""
 
     def __init__(self, cfg: AutoscaleConfig):
         self.cfg = cfg
         self._last_change_s = -float("inf")
+        self.ewma_rate_fps: float | None = None      # cloud arrivals / s
+        self.ewma_service_s: float | None = None     # per-frame cloud service
 
     def initial_capacity(self, configured: int) -> int:
         return min(max(configured, self.cfg.min_capacity), self.cfg.max_capacity)
@@ -187,6 +235,75 @@ class Autoscaler:
             return max(capacity - c.step, c.min_capacity)
         return capacity
 
+    def observe_rate(self, arrivals: int, window_s: float) -> float:
+        """Fold one control window's cloud-bound arrival count into the EWMA
+        rate forecast; returns the updated rate (arrivals / s)."""
+        inst = arrivals / window_s
+        a = self.cfg.ewma_alpha
+        self.ewma_rate_fps = inst if self.ewma_rate_fps is None \
+            else a * inst + (1.0 - a) * self.ewma_rate_fps
+        return self.ewma_rate_fps
+
+    def observe_service(self, per_frame_service_s: float) -> float:
+        """Fold one dispatched batch's per-frame service time into the EWMA
+        service estimate; returns the updated estimate."""
+        a = self.cfg.ewma_alpha
+        self.ewma_service_s = per_frame_service_s \
+            if self.ewma_service_s is None \
+            else a * per_frame_service_s + (1.0 - a) * self.ewma_service_s
+        return self.ewma_service_s
+
+    def decide_predictive(self, now: float, backlog_s: float,
+                          capacity: int) -> int:
+        """Provision for forecast work over the lookahead window (see
+        ``AutoscaleConfig``); jumps straight to the clamped target."""
+        c = self.cfg
+        if now - self._last_change_s < c.cooldown_s:
+            return capacity
+        rate = self.ewma_rate_fps or 0.0
+        service = self.ewma_service_s or 0.0
+        work_s = backlog_s + rate * c.lookahead_s * service
+        target = int(np.ceil(work_s / c.lookahead_s)) if work_s > 0 else 0
+        target = min(max(target, c.min_capacity), c.max_capacity)
+        if target != capacity:
+            self._last_change_s = now
+        return target
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Frame statistics for one SLA class across the fleet. Safe on an empty
+    class (a class named by a stream that completed zero frames reports
+    0.0 ratios, not a division by zero)."""
+    name: str
+    stats: RunStats
+    dropped: int = 0
+
+    @property
+    def frames(self) -> int:
+        return len(self.stats.frames)
+
+    @property
+    def violation_ratio(self) -> float:
+        return self.stats.violation_ratio
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.stats.p50_latency_s
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.stats.p99_latency_s
+
+    @property
+    def avg_queue_s(self) -> float:
+        return self.stats.avg_queue_s
+
+    @property
+    def drop_ratio(self) -> float:
+        offered = self.frames + self.dropped
+        return self.dropped / offered if offered else 0.0
+
 
 @dataclasses.dataclass
 class FleetStats:
@@ -200,6 +317,8 @@ class FleetStats:
     # single entry (0, capacity)
     capacity_timeline: list[tuple[float, int]] = \
         dataclasses.field(default_factory=list)
+    # SLA class of stream i (parallel to per_stream; empty = all default)
+    stream_classes: list[str] = dataclasses.field(default_factory=list)
 
     @functools.cached_property
     def aggregate(self) -> RunStats:
@@ -278,6 +397,32 @@ class FleetStats:
     def avg_batch_size(self) -> float:
         return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
 
+    @functools.cached_property
+    def per_class(self) -> dict[str, ClassStats]:
+        """Per-SLA-class violation/drop ratios and latency percentiles, keyed
+        by class name in first-appearance order. Every class named by a
+        stream appears, even with zero completed frames."""
+        classes = self.stream_classes or \
+            [sla_lib.DEFAULT_CLASS] * len(self.per_stream)
+        out: dict[str, ClassStats] = {}
+        dropped = self.dropped_per_stream or [0] * len(self.per_stream)
+        by_cls_frames: dict[str, list[FrameResult]] = {}
+        by_cls_dropped: dict[str, int] = {}
+        for cls, st, dr in zip(classes, self.per_stream, dropped):
+            by_cls_frames.setdefault(cls, []).extend(st.frames)
+            by_cls_dropped[cls] = by_cls_dropped.get(cls, 0) + dr
+        for cls in classes:
+            if cls not in out:
+                out[cls] = ClassStats(cls, RunStats(by_cls_frames[cls]),
+                                      by_cls_dropped[cls])
+        return out
+
+    def class_violation_ratio(self, name: str) -> float:
+        """Violation ratio of one class; 0.0 when the class served nothing
+        (or is absent entirely)."""
+        cs = self.per_class.get(name)
+        return cs.violation_ratio if cs is not None else 0.0
+
     @property
     def aggregate_fps(self) -> float:
         return len(self.all_frames) / self.horizon_s if self.horizon_s > 0 else 0.0
@@ -300,12 +445,21 @@ class FleetRuntime:
                  cloud: CloudTierConfig | None = None,
                  acc_model: AccuracyModel | None = None,
                  model_cfg=None, params=None,
-                 autoscaler: Autoscaler | AutoscaleConfig | None = None):
+                 autoscaler: Autoscaler | AutoscaleConfig | None = None,
+                 sla_classes: dict[str, sla_lib.SlaClass] | None = None,
+                 priority: bool | None = None):
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
         if isinstance(autoscaler, AutoscaleConfig):
             autoscaler = Autoscaler(autoscaler)
         self.autoscaler = autoscaler
+        self.sla_classes = dict(sla_classes) if sla_classes is not None \
+            else dict(sla_lib.DEFAULT_SLA_CLASSES)
+        # priority admission: explicit, or auto (on iff any stream deviates
+        # from the default class — an all-default fleet keeps the FIFO
+        # micro-batcher and therefore today's behavior, event for event)
+        self.priority = priority if priority is not None else \
+            any(s.sla_class != sla_lib.DEFAULT_CLASS for s in streams)
         acc = acc_model or AccuracyModel()
         self.model_cfg = model_cfg
         self.params = params
@@ -315,12 +469,18 @@ class FleetRuntime:
         # per-stream scheduler state: a dedicated engine (shared model/plan
         # cache; profile per device tier, planner tables value-shared per
         # tier) so per-stream SLAs and hardware drive per-stream decisions
-        # without re-deriving any model-dependent state
+        # without re-deriving any model-dependent state. The stream's SLA
+        # budget is its (override or fleet) SLA scaled by its class's
+        # sla_multiplier — 1.0 for the default class, so plain fleets see
+        # exactly the configured SLA.
         self.engines = [
             JanusEngine(s.profile if s.profile is not None else profile,
                         dataclasses.replace(
                             base_cfg,
-                            sla_s=base_cfg.sla_s if s.sla_s is None else s.sla_s),
+                            sla_s=(base_cfg.sla_s if s.sla_s is None
+                                   else s.sla_s)
+                            * sla_lib.resolve_sla_class(
+                                s.sla_class, self.sla_classes).sla_multiplier),
                         acc_model=acc, model_cfg=model_cfg, params=params,
                         plan_cache=self.plan_cache)
             for s in streams
@@ -336,7 +496,19 @@ class FleetRuntime:
         dropped = [0] * len(streams)
         inflight = [0] * len(streams)
         device_free = [0.0] * len(streams)  # per-client device busy-until
-        micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
+        # admission discipline: FIFO for all-default-class fleets (the classic
+        # runtime, preserved event for event), class-priority otherwise
+        if self.priority:
+            # note: this runtime executes a dispatched micro-batch as ONE
+            # stacked forward (every member completes together), so the
+            # batcher's intra-batch admission *order* is timing-neutral
+            # here — the fleet-level win comes from the per-class deadline
+            # windows moving the flush itself. The order is the batcher's
+            # contract for sequential consumers.
+            micro = PriorityMicroBatcher(cloud.max_batch, cloud.max_wait_s,
+                                         classes=self.sla_classes)
+        else:
+            micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
         executors: list[float] = []   # busy-until heap, capped at `capacity`
         items: dict[int, _CloudItem] = {}
         rid = itertools.count()
@@ -353,6 +525,9 @@ class FleetRuntime:
         # later windows looking busy)
         service_intervals: list[tuple[float, float]] = []
         state = {"busy": 0.0, "horizon": 0.0, "capacity": capacity0,
+                 # cloud-bound offers this control window (predictive policy's
+                 # arrival-rate signal; reset every control tick)
+                 "cloud_arrivals": 0,
                  # arrivals still owed a verdict (finish or drop): the
                  # autoscale control timer keeps itself alive only while > 0
                  "remaining": sum(
@@ -396,13 +571,23 @@ class FleetRuntime:
         def offer_item(item: _CloudItem, now: float) -> None:
             r = next(rid)
             items[r] = item
-            batch = micro.offer(Request(r, arrival_s=now), now)
+            state["cloud_arrivals"] += 1
+            spec = streams[item.stream]
+            req = Request(r, arrival_s=now, sla_class=spec.sla_class,
+                          deadline_s=item.t0
+                          + self.engines[item.stream].cfg.sla_s)
+            batch = micro.offer(req, now)
             if batch is not None:
                 dispatch(batch, now)
+            elif self.priority:
+                # class windows move the flush deadline *earlier* when an
+                # urgent frame joins, so re-arm after every offer; a timer
+                # that fires past a flush is a no-op poll
+                push(max(micro.deadline(), now), poll_micro)
             elif len(micro.pending) == 1:
-                # the batch just became non-empty: one expiry timer covers it
-                # (the deadline is keyed to pending[0] and never moves, so
-                # later joiners would only add redundant heap events)
+                # FIFO: the batch just became non-empty: one expiry timer
+                # covers it (the deadline is keyed to pending[0] and never
+                # moves, so later joiners would only add redundant events)
                 push(micro.deadline(), poll_micro)
 
         def poll_micro(now: float) -> None:
@@ -431,7 +616,12 @@ class FleetRuntime:
             heapq.heappush(executors, start + service)
             state["busy"] += service
             if scaler is not None:
-                service_intervals.append((start, start + service))
+                if scaler.cfg.policy != "predictive":
+                    # windowed-utilization bookkeeping; the predictive branch
+                    # reads the executor heap instead, so appending here
+                    # would only accumulate unread tuples for the whole run
+                    service_intervals.append((start, start + service))
+                scaler.observe_service(service / len(batch))
             batch_sizes.append(len(batch))
             done = start + service
             for m in members:
@@ -463,14 +653,26 @@ class FleetRuntime:
 
         def control(now: float) -> None:
             window = scaler.cfg.interval_s
-            w0, busy, keep = now - window, 0.0, []
-            for s, e in service_intervals:
-                busy += max(0.0, min(e, now) - max(s, w0))
-                if e > now:  # still busy (or queued to start): next window too
-                    keep.append((s, e))
-            service_intervals[:] = keep
-            util = busy / (state["capacity"] * window)
-            set_capacity(scaler.decide(now, util, state["capacity"]), now)
+            if scaler.cfg.policy == "predictive":
+                # feed-forward: EWMA arrival-rate forecast + current backlog
+                # (service seconds still queued or running on the executors
+                # plus frames parked in the micro-batcher)
+                scaler.observe_rate(state["cloud_arrivals"], window)
+                state["cloud_arrivals"] = 0
+                backlog = sum(max(0.0, e - now) for e in executors)
+                backlog += len(micro.pending) * (scaler.ewma_service_s or 0.0)
+                newc = scaler.decide_predictive(now, backlog,
+                                                state["capacity"])
+            else:  # reactive: windowed utilization of the current capacity
+                w0, busy, keep = now - window, 0.0, []
+                for s, e in service_intervals:
+                    busy += max(0.0, min(e, now) - max(s, w0))
+                    if e > now:  # still busy (or queued): next window too
+                        keep.append((s, e))
+                service_intervals[:] = keep
+                util = busy / (state["capacity"] * window)
+                newc = scaler.decide(now, util, state["capacity"])
+            set_capacity(newc, now)
             if state["remaining"] > 0:
                 push(now + window, control)
 
@@ -496,4 +698,5 @@ class FleetRuntime:
                           capacity=capacity0,
                           batch_sizes=batch_sizes,
                           dropped_per_stream=dropped,
-                          capacity_timeline=cap_timeline)
+                          capacity_timeline=cap_timeline,
+                          stream_classes=[s.sla_class for s in streams])

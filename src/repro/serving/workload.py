@@ -47,13 +47,14 @@ from repro.core.bandwidth import NetworkTrace
 from repro.core.engine import EngineConfig
 from repro.core.scheduler import ModelProfile
 from repro.serving import fleet
+from repro.serving import sla as sla_lib
 
 
 # ---------------------------------------------------------------------------
 # arrival processes
 # ---------------------------------------------------------------------------
 
-ARRIVAL_KINDS = ("closed", "poisson", "mmpp")
+ARRIVAL_KINDS = ("closed", "poisson", "mmpp", "diurnal", "trace")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +62,23 @@ class ArrivalConfig:
     """How frames arrive on one stream.
 
     ``closed`` is the classic closed loop (``period_s`` = min spacing). The
-    open-loop kinds generate absolute arrival times up front: ``poisson``
-    draws exponential inter-arrivals at ``rate_fps``; ``mmpp`` switches
-    between a calm state (``rate_fps``) and a burst state
-    (``burst_rate_fps``) after each arrival with probabilities ``p_burst`` /
-    ``p_calm``. ``max_inflight`` is the per-stream admission bound (0 =
-    unbounded; ignored for closed loop, which never exceeds one in flight).
+    open-loop kinds generate absolute arrival times up front:
+
+      * ``poisson`` — exponential inter-arrivals at ``rate_fps``;
+      * ``mmpp`` — 2-state Markov-modulated Poisson: switches between a calm
+        state (``rate_fps``) and a burst state (``burst_rate_fps``) after
+        each arrival with probabilities ``p_burst`` / ``p_calm``;
+      * ``diurnal`` — non-homogeneous Poisson whose rate follows a sinusoidal
+        day cycle, ``rate_fps * (1 + diurnal_amplitude *
+        sin(2*pi*(t + diurnal_phase_s)/diurnal_period_s))``, sampled by
+        thinning — the compressed-time analogue of a day/night load curve;
+      * ``trace`` — non-homogeneous Poisson over a piecewise-constant rate
+        schedule ``rate_schedule = ((t_start, fps), ...)`` (t_start ascending,
+        first entry at 0.0; each rate holds until the next entry) — replay of
+        a measured arrival-rate timeline.
+
+    ``max_inflight`` is the per-stream admission bound (0 = unbounded;
+    ignored for closed loop, which never exceeds one in flight).
     """
     kind: str = "closed"
     rate_fps: float = 10.0
@@ -75,12 +87,16 @@ class ArrivalConfig:
     p_calm: float = 0.30
     period_s: float = 0.0
     max_inflight: int = 0
+    diurnal_period_s: float = 60.0
+    diurnal_amplitude: float = 0.8
+    diurnal_phase_s: float = 0.0
+    rate_schedule: tuple[tuple[float, float], ...] = ()
 
     def __post_init__(self):
         if self.kind not in ARRIVAL_KINDS:
             raise ValueError(f"arrival kind must be one of {ARRIVAL_KINDS}, "
                              f"got {self.kind!r}")
-        if self.kind != "closed" and self.rate_fps <= 0:
+        if self.kind not in ("closed", "trace") and self.rate_fps <= 0:
             raise ValueError(f"rate_fps must be > 0, got {self.rate_fps}")
         if self.kind == "mmpp" and self.burst_rate_fps <= 0:
             raise ValueError(
@@ -91,6 +107,66 @@ class ArrivalConfig:
         if self.max_inflight < 0:
             raise ValueError(
                 f"max_inflight must be >= 0, got {self.max_inflight}")
+        if self.kind == "diurnal":
+            if self.diurnal_period_s <= 0:
+                raise ValueError(f"diurnal_period_s must be > 0, "
+                                 f"got {self.diurnal_period_s}")
+            if not 0.0 <= self.diurnal_amplitude <= 1.0:
+                raise ValueError(f"diurnal_amplitude must be in [0, 1], "
+                                 f"got {self.diurnal_amplitude}")
+        if self.kind == "trace":
+            sched = self.rate_schedule
+            if not sched:
+                raise ValueError("arrival kind 'trace' needs a rate_schedule")
+            times = [t for t, _ in sched]
+            if times[0] != 0.0:
+                raise ValueError("rate_schedule must start at t=0, "
+                                 f"got {times[0]}")
+            if any(b <= a for a, b in zip(times, times[1:])):
+                raise ValueError("rate_schedule times must be ascending")
+            if any(r < 0 for _, r in sched):
+                raise ValueError("rate_schedule rates must be >= 0")
+            if sched[-1][1] <= 0:
+                raise ValueError("rate_schedule must end on a rate > 0 (the "
+                                 "final rate holds forever; a 0 tail would "
+                                 "never produce the remaining arrivals)")
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous arrival rate at time ``t`` (diurnal/trace kinds)."""
+        if self.kind == "diurnal":
+            return self.rate_fps * (1.0 + self.diurnal_amplitude * float(
+                np.sin(2.0 * np.pi * (t + self.diurnal_phase_s)
+                       / self.diurnal_period_s)))
+        if self.kind == "trace":
+            rate = self.rate_schedule[0][1]
+            for t0, r in self.rate_schedule:
+                if t0 > t:
+                    break
+                rate = r
+            return rate
+        return self.rate_fps
+
+    def peak_rate(self) -> float:
+        """Upper bound on ``rate_at`` (the thinning envelope)."""
+        if self.kind == "diurnal":
+            return self.rate_fps * (1.0 + self.diurnal_amplitude)
+        if self.kind == "trace":
+            return max(r for _, r in self.rate_schedule)
+        return self.rate_fps
+
+
+def _thinned_arrivals(cfg: ArrivalConfig, n_frames: int,
+                      rng: np.random.Generator) -> tuple[float, ...]:
+    """Non-homogeneous Poisson arrivals by thinning (Lewis & Shedler):
+    candidate points at the peak rate, accepted with probability
+    ``rate(t) / peak``."""
+    lam_max = cfg.peak_rate()
+    out, t = [], 0.0
+    while len(out) < n_frames:
+        t += float(rng.exponential(1.0 / lam_max))
+        if rng.random() * lam_max < cfg.rate_at(t):
+            out.append(t)
+    return tuple(out)
 
 
 def arrival_times(cfg: ArrivalConfig, n_frames: int,
@@ -100,6 +176,8 @@ def arrival_times(cfg: ArrivalConfig, n_frames: int,
         return None
     if cfg.kind == "poisson":
         return tuple(np.cumsum(rng.exponential(1.0 / cfg.rate_fps, n_frames)))
+    if cfg.kind in ("diurnal", "trace"):
+        return _thinned_arrivals(cfg, n_frames, rng)
     # mmpp: per-arrival state switch, exponential gap at the state's rate
     out, t, burst = [], 0.0, False
     for _ in range(n_frames):
@@ -264,7 +342,9 @@ def _from_dict(cls, d: dict, what: str):
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """One serving scenario, JSON-loadable. Defaults reproduce the classic
-    fleet: closed loop, one uniform tier, synthetic traces, static cloud."""
+    fleet: closed loop, one uniform tier, one (standard) SLA class,
+    synthetic traces, static cloud. See ``docs/workload_spec.md`` for the
+    JSON schema."""
     n_streams: int = 4
     n_frames: int = 30
     policy: str = "janus"
@@ -272,6 +352,14 @@ class WorkloadSpec:
     seed: int = 0
     arrivals: ArrivalConfig = dataclasses.field(default_factory=ArrivalConfig)
     tiers: tuple[str, ...] = ("uniform",)  # assigned round-robin to streams
+    # SLA classes assigned round-robin to streams (repro.serving.sla); any
+    # non-default class flips the shared tier to priority admission
+    sla_classes: tuple[str, ...] = (sla_lib.DEFAULT_CLASS,)
+    # optional per-class overrides / new classes, JSON style:
+    # {"gold": {"priority": 0, "sla_multiplier": 0.4, "wait_multiplier": 0.2}}
+    sla_class_defs: dict = dataclasses.field(default_factory=dict)
+    # force priority admission on/off (None = auto from sla_classes)
+    priority: bool | None = None
     network: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
     # shared-tier overrides (None = default_cloud_config(n_streams) values)
     capacity: int | None = None
@@ -290,12 +378,25 @@ class WorkloadSpec:
             raise ValueError("tiers must name at least one device tier")
         for t in self.tiers:
             resolve_tier(t)  # fail fast on unknown tier names
+        if not self.sla_classes:
+            raise ValueError("sla_classes must name at least one SLA class")
+        table = self.resolved_sla_classes()
+        for c in self.sla_classes:
+            sla_lib.resolve_sla_class(c, table)  # fail fast on unknown names
+
+    def resolved_sla_classes(self) -> dict[str, sla_lib.SlaClass]:
+        """The default class registry overlaid with this spec's overrides."""
+        return sla_lib.classes_from_dict(self.sla_class_defs)
 
     @classmethod
     def from_dict(cls, d: dict) -> "WorkloadSpec":
         d = dict(d)
         if "arrivals" in d:
-            d["arrivals"] = _from_dict(ArrivalConfig, d["arrivals"], "arrivals")
+            a = dict(d["arrivals"])
+            if "rate_schedule" in a:
+                a["rate_schedule"] = tuple(
+                    (float(t), float(r)) for t, r in a["rate_schedule"])
+            d["arrivals"] = _from_dict(ArrivalConfig, a, "arrivals")
         if "network" in d:
             d["network"] = _from_dict(NetworkConfig, d["network"], "network")
         if d.get("autoscale") is not None:
@@ -303,6 +404,8 @@ class WorkloadSpec:
                                         "autoscale")
         if "tiers" in d:
             d["tiers"] = tuple(d["tiers"])
+        if "sla_classes" in d:
+            d["sla_classes"] = tuple(d["sla_classes"])
         return _from_dict(cls, d, "workload")
 
     @classmethod
@@ -313,6 +416,9 @@ class WorkloadSpec:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["tiers"] = list(self.tiers)
+        d["sla_classes"] = list(self.sla_classes)
+        d["arrivals"]["rate_schedule"] = \
+            [list(p) for p in self.arrivals.rate_schedule]
         return d
 
     # -- assembly -----------------------------------------------------------
@@ -350,7 +456,8 @@ class WorkloadSpec:
                                             np.random.default_rng(arrival_ss)),
                 max_inflight=self.arrivals.max_inflight,
                 profile=None if prof is profile else prof,
-                tier=tier.name))
+                tier=tier.name,
+                sla_class=self.sla_classes[si % len(self.sla_classes)]))
         if self.network.kind == "csv":
             pool = csv_traces(self.network.path, self.network.rtt_ms / 1e3)
             specs = [dataclasses.replace(s, trace=pool[i % len(pool)])
@@ -366,4 +473,6 @@ def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
         profile, base_cfg, spec.build_streams(profile),
         cloud=spec.cloud_config(), acc_model=acc_model,
         model_cfg=model_cfg, params=params,
-        autoscaler=spec.autoscale)
+        autoscaler=spec.autoscale,
+        sla_classes=spec.resolved_sla_classes(),
+        priority=spec.priority)

@@ -1,0 +1,314 @@
+"""SLA classes + priority micro-batching: the PriorityMicroBatcher's
+admission order (class priority, deadline slack, aging), per-class deadline
+windows, FIFO equivalence for a single class (bit-exact at the fleet level),
+starvation bounds, per-class FleetStats, and the SlaClass registry."""
+import math
+
+import numpy as np
+import pytest
+from conftest import small_model_profile as _profile
+
+from repro.core import bandwidth, engine
+from repro.core.engine import RunStats
+from repro.serving import fleet, sla, workload
+from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
+
+
+def _cfg(sla_s=0.3):
+    return engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+
+
+def _req(rid, arrival, cls="standard", deadline=math.inf):
+    return Request(rid, arrival_s=arrival, sla_class=cls, deadline_s=deadline)
+
+
+# ------------------------------------------------------- SlaClass registry
+
+def test_default_classes_and_resolution():
+    assert sla.resolve_sla_class("standard").sla_multiplier == 1.0
+    assert sla.resolve_sla_class("standard").wait_multiplier == 1.0
+    inter = sla.resolve_sla_class("interactive")
+    batch = sla.resolve_sla_class("batch")
+    assert inter.priority < sla.resolve_sla_class("standard").priority
+    assert batch.priority > sla.resolve_sla_class("standard").priority
+    assert inter.sla_multiplier < 1.0 < batch.sla_multiplier
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        sla.resolve_sla_class("platinum")
+
+
+def test_sla_class_validation():
+    with pytest.raises(ValueError):
+        sla.SlaClass("", priority=0)
+    with pytest.raises(ValueError):
+        sla.SlaClass("x", priority=-1)
+    with pytest.raises(ValueError):
+        sla.SlaClass("x", priority=0, sla_multiplier=0.0)
+    with pytest.raises(ValueError):
+        sla.SlaClass("x", priority=0, wait_multiplier=-0.5)
+
+
+def test_classes_from_dict_overlays_and_adds():
+    table = sla.classes_from_dict(
+        {"interactive": {"sla_multiplier": 0.4},
+         "gold": {"priority": 0, "sla_multiplier": 0.3,
+                  "wait_multiplier": 0.1}})
+    assert table["interactive"].sla_multiplier == 0.4
+    assert table["interactive"].priority == \
+        sla.DEFAULT_SLA_CLASSES["interactive"].priority  # kept
+    assert table["gold"].name == "gold" and table["gold"].priority == 0
+    assert table["standard"] == sla.DEFAULT_SLA_CLASSES["standard"]
+    with pytest.raises(ValueError, match="needs a priority"):
+        sla.classes_from_dict({"new-class": {"sla_multiplier": 1.0}})
+    with pytest.raises(ValueError, match="unknown SlaClass keys"):
+        sla.classes_from_dict({"interactive": {"sla_mult": 0.4}})
+    # round trip
+    assert sla.classes_from_dict(sla.classes_to_dict(table)) == table
+
+
+# ------------------------------------------- PriorityMicroBatcher semantics
+
+def test_single_class_matches_fifo_microbatcher_step_for_step():
+    """Same offers -> same flush sets at the same times as the FIFO batcher."""
+    fifo = MicroBatcher(max_batch=3, max_wait_s=0.01)
+    prio = PriorityMicroBatcher(max_batch=3, max_wait_s=0.01)
+    script = [(0.000, 1), (0.004, 2), (0.006, 3),   # size flush at 3rd offer
+              (0.020, 4), (0.032, None),            # deadline flush via poll
+              (0.040, 5)]
+    for t, rid in script:
+        if rid is None:
+            a, b = fifo.poll(t), prio.poll(t)
+        else:
+            a, b = fifo.offer(Request(rid, t), t), \
+                prio.offer(_req(rid, t), t)
+        ga = None if a is None else [r.rid for r in a]
+        gb = None if b is None else [r.rid for r in b]
+        assert ga == gb, (t, rid, ga, gb)
+        assert fifo.deadline() == prio.deadline()
+    assert [r.rid for r in fifo.flush()] == [r.rid for r in prio.flush()]
+
+
+def test_priority_flush_drains_urgent_lane_first():
+    prio = PriorityMicroBatcher(max_batch=2, max_wait_s=0.01)
+    assert prio.offer(_req(1, 0.0, "batch"), 0.0) is None
+    out = prio.offer(_req(2, 0.001, "interactive"), 0.001)
+    # size flush: interactive admitted ahead of the earlier batch frame
+    assert [r.rid for r in out] == [2, 1]
+
+
+def test_interactive_window_pulls_deadline_earlier_and_drains_batcher():
+    prio = PriorityMicroBatcher(max_batch=8, max_wait_s=0.010)
+    prio.offer(_req(1, 0.0, "batch"), 0.0)          # window 4x = 40 ms
+    assert prio.deadline() == pytest.approx(0.040)
+    prio.offer(_req(2, 0.002, "interactive"), 0.002)  # window 0.25x = 2.5 ms
+    assert prio.deadline() == pytest.approx(0.0045)
+    # not yet expired -> no flush; a timer at deadline() always flushes
+    assert prio.poll(0.004) is None
+    out = prio.poll(prio.deadline())
+    # preemptive drain: the interactive expiry flushes ~37 ms before the
+    # batch frame's own window, interactive lane first, batch riding along
+    # (work-conserving — holding it back would only shrink the batch)
+    assert [r.rid for r in out] == [2, 1]
+    assert prio.pending == [] and prio.deadline() is None
+
+
+def test_batch_only_traffic_keeps_its_long_window():
+    """Without urgent traffic the batch lane batches over its full 4x
+    window — the per-class window is what FIFO's single window can't do."""
+    prio = PriorityMicroBatcher(max_batch=8, max_wait_s=0.010)
+    prio.offer(_req(1, 0.0, "batch"), 0.0)            # window ends 0.040
+    prio.offer(_req(2, 0.030, "batch"), 0.030)        # would expire FIFO 3x
+    assert prio.poll(0.0101) is None                  # FIFO would flush here
+    assert prio.deadline() == pytest.approx(0.040)
+    out = prio.poll(prio.deadline())
+    assert [r.rid for r in out] == [1, 2]
+
+
+def test_equal_deadline_tie_break_is_arrival_order():
+    """Same class, same arrival, same SLA deadline: admission must be the
+    deterministic arrival (seq) order, run after run."""
+    for _ in range(3):
+        prio = PriorityMicroBatcher(max_batch=4, max_wait_s=0.01)
+        for rid in (7, 3, 9, 5):  # rids shuffled; arrival order is 7,3,9,5
+            got = prio.offer(_req(rid, 0.0, "standard", deadline=1.0), 0.0)
+        assert [r.rid for r in got] == [7, 3, 9, 5]
+
+
+def test_slack_orders_within_a_class():
+    prio = PriorityMicroBatcher(max_batch=2, max_wait_s=0.01)
+    prio.offer(_req(1, 0.0, "standard", deadline=2.0), 0.0)
+    out = prio.offer(_req(2, 0.0, "standard", deadline=1.0), 0.0)
+    assert [r.rid for r in out] == [2, 1]   # tighter slack first
+
+
+def test_aging_promotes_starved_batch_frame():
+    """A batch-class frame older than rank_gap * aging_s outranks fresh
+    interactive traffic and must win a slot in the next flush."""
+    prio = PriorityMicroBatcher(max_batch=2, max_wait_s=0.01, aging_s=0.05)
+    # batch arrives at t=0 (rank 2); interactive traffic starts much later
+    prio.offer(_req(1, 0.0, "batch"), 0.0)
+    # rank gap to interactive is 2 -> promoted past it after 2*aging_s=0.1 s
+    t = 0.2
+    out = prio.offer(_req(2, t, "interactive"), t)   # size flush at 2 pending
+    assert out is not None and [r.rid for r in out] == [1, 2]
+    # contrast: without aging the interactive frame would have led the flush
+    fresh = PriorityMicroBatcher(max_batch=2, max_wait_s=0.01, aging_s=10.0)
+    fresh.offer(_req(1, 0.0, "batch"), 0.0)
+    out2 = fresh.offer(_req(2, t, "interactive"), t)
+    assert [r.rid for r in out2] == [2, 1]
+
+
+def test_starvation_bound_under_sustained_interactive_load():
+    """Sustained interactive load cannot starve the batch lane: flushes are
+    work-conserving (the batch frame rides along with the next urgent
+    expiry) and a frame's own class window is a hard upper bound on its
+    pending time in every case."""
+    prio = PriorityMicroBatcher(max_batch=4, max_wait_s=0.01)
+    batch_window_end = 0.040                     # 4x wait multiplier
+    prio.offer(_req(0, 0.0, "batch"), 0.0)
+    flushed_batch_at = None
+    for i in range(1, 40):
+        t = 0.002 * i                            # steady interactive stream
+        # fire the expiry timer(s) the serving loop would arm
+        while prio.deadline() is not None and prio.deadline() <= t:
+            d = prio.deadline()
+            out = prio.poll(d) or []
+            if any(r.rid == 0 for r in out):
+                flushed_batch_at = d
+        if flushed_batch_at is not None:
+            break
+        prio.offer(_req(i, t, "interactive"), t)
+    assert flushed_batch_at is not None, "batch frame starved"
+    assert flushed_batch_at <= batch_window_end
+    # work-conserving: it went out with the FIRST urgent expiry (t=2 ms
+    # arrival + 2.5 ms interactive window), ~35 ms before its own deadline
+    assert flushed_batch_at == pytest.approx(0.0045)
+
+
+def test_priority_batcher_validation_and_flush_order():
+    with pytest.raises(ValueError):
+        PriorityMicroBatcher(0, 0.01)
+    with pytest.raises(ValueError):
+        PriorityMicroBatcher(2, -1.0)
+    with pytest.raises(ValueError):
+        PriorityMicroBatcher(2, 0.01, aging_s=0.0)
+    prio = PriorityMicroBatcher(8, 0.01)
+    prio.offer(_req(1, 0.0, "batch"), 0.0)
+    prio.offer(_req(2, 0.0, "interactive"), 0.0)
+    prio.offer(_req(3, 0.0, "standard"), 0.0)
+    assert [r.rid for r in prio.flush()] == [2, 3, 1]
+    assert prio.pending == [] and prio.deadline() is None
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        prio.offer(_req(4, 0.0, "mystery"), 0.0)
+
+
+# ------------------------------------------------- fleet-level SLA classes
+
+def test_single_class_priority_fleet_reproduces_fifo_bit_exact():
+    """Acceptance: priority admission with one (default) class is the FIFO
+    fleet, frame for frame — latencies, queueing, batches, drops."""
+    prof, cfg = _profile(), _cfg()
+    spec = workload.WorkloadSpec(
+        n_streams=6, n_frames=25, seed=7,
+        arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=20.0,
+                                        max_inflight=4),
+        network=workload.NetworkConfig(network="wifi", mobility="static"),
+        capacity=1, max_batch=4)
+    rt_fifo = workload.build_runtime(spec, prof, cfg)
+    assert rt_fifo.priority is False          # auto: all-default-class
+    rt_prio = workload.build_runtime(
+        __import__("dataclasses").replace(spec, priority=True), prof, cfg)
+    assert rt_prio.priority is True
+    fs_a, fs_b = rt_fifo.run(), rt_prio.run()
+    assert fs_a.batch_sizes == fs_b.batch_sizes
+    assert fs_a.dropped_per_stream == fs_b.dropped_per_stream
+    for st_a, st_b in zip(fs_a.per_stream, fs_b.per_stream):
+        np.testing.assert_array_equal([f.latency_s for f in st_a.frames],
+                                      [f.latency_s for f in st_b.frames])
+        np.testing.assert_array_equal([f.queue_s for f in st_a.frames],
+                                      [f.queue_s for f in st_b.frames])
+
+
+def test_sla_multiplier_scales_engine_sla():
+    prof, cfg = _profile(), _cfg(sla_s=0.4)
+    trace = bandwidth.NetworkTrace(np.full(4, 20e6), 0.005, "t")
+    rt = fleet.FleetRuntime(
+        prof, cfg,
+        [fleet.StreamSpec(trace, 4, sla_class=c)
+         for c in ("interactive", "standard", "batch")])
+    assert rt.engines[0].cfg.sla_s == pytest.approx(0.2)   # 0.5x
+    assert rt.engines[1].cfg.sla_s == 0.4                  # identity
+    assert rt.engines[2].cfg.sla_s == pytest.approx(1.6)   # 4x
+    assert rt.priority is True   # mixed classes -> auto priority
+
+
+def test_priority_protects_interactive_stream_under_contention():
+    """Simultaneous arrivals through one executor: the interactive stream
+    must finish no later than under FIFO, and strictly earlier in queue."""
+    prof, cfg = _profile(), _cfg(sla_s=5.0)
+    trace = bandwidth.NetworkTrace(np.full(8, 40e6), 0.003, "steady")
+    def build(priority):
+        streams = ([fleet.StreamSpec(trace, 1, sla_class="batch",
+                                     arrival_times=(0.0,))] * 3
+                   + [fleet.StreamSpec(trace, 1, sla_class="interactive",
+                                       arrival_times=(0.0,))])
+        return fleet.FleetRuntime(
+            prof, cfg, streams,
+            cloud=fleet.CloudTierConfig(capacity=1, max_batch=2,
+                                        max_wait_s=0.004),
+            priority=priority).run()
+    fifo, prio = build(False), build(True)
+    qi_fifo = fifo.per_stream[3].frames[0].queue_s
+    qi_prio = prio.per_stream[3].frames[0].queue_s
+    assert qi_prio <= qi_fifo
+    assert prio.per_class["interactive"].p99_latency_s <= \
+        fifo.per_class["interactive"].p99_latency_s
+
+
+# ------------------------------------------------------- per-class stats
+
+def test_per_class_stats_aggregate_and_empty_class():
+    prof, cfg = _profile(), _cfg()
+    trace = bandwidth.NetworkTrace(np.full(6, 20e6), 0.005, "t")
+    rt = fleet.FleetRuntime(
+        prof, cfg,
+        [fleet.StreamSpec(trace, 6, sla_class="interactive"),
+         fleet.StreamSpec(trace, 6, sla_class="interactive"),
+         fleet.StreamSpec(trace, 6, sla_class="batch")])
+    fs = rt.run()
+    pc = fs.per_class
+    assert set(pc) == {"interactive", "batch"}
+    assert pc["interactive"].frames == 12 and pc["batch"].frames == 6
+    assert sum(c.frames for c in pc.values()) == len(fs.all_frames)
+    for c in pc.values():
+        assert 0.0 <= c.violation_ratio <= 1.0
+        assert c.drop_ratio == 0.0
+    # absent class: defined 0.0, not a KeyError
+    assert fs.class_violation_ratio("standard") == 0.0
+
+
+def test_empty_class_stats_no_division_by_zero():
+    """A stream whose class completed zero frames (all dropped) still
+    reports clean per-class ratios."""
+    cs = fleet.ClassStats("interactive", RunStats([]), dropped=0)
+    assert cs.violation_ratio == 0.0 and cs.drop_ratio == 0.0
+    assert cs.p50_latency_s == 0.0 and cs.p99_latency_s == 0.0
+    cs2 = fleet.ClassStats("batch", RunStats([]), dropped=5)
+    assert cs2.drop_ratio == 1.0 and cs2.violation_ratio == 0.0
+    # synthesized FleetStats with an all-dropped class
+    fs = fleet.FleetStats(per_stream=[RunStats([])], cloud_busy_s=0.0,
+                          horizon_s=0.0, capacity=1, batch_sizes=[],
+                          dropped_per_stream=[3],
+                          stream_classes=["interactive"])
+    assert fs.per_class["interactive"].frames == 0
+    assert fs.per_class["interactive"].drop_ratio == 1.0
+    assert fs.per_class["interactive"].violation_ratio == 0.0
+
+
+def test_fleet_stats_default_stream_classes_backcompat():
+    """FleetStats built without stream_classes (older call sites) defaults
+    everything to the standard class."""
+    fs = fleet.FleetStats(per_stream=[RunStats([]), RunStats([])],
+                          cloud_busy_s=0.0, horizon_s=0.0, capacity=1,
+                          batch_sizes=[])
+    assert set(fs.per_class) == {sla.DEFAULT_CLASS}
+    assert fs.per_class[sla.DEFAULT_CLASS].frames == 0

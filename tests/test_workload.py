@@ -160,6 +160,58 @@ def test_arrival_config_validation():
         workload.ArrivalConfig(kind="mmpp", p_burst=5.0)
     with pytest.raises(ValueError):
         workload.ArrivalConfig(kind="mmpp", p_calm=-0.1)
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="diurnal", diurnal_period_s=0.0)
+    with pytest.raises(ValueError):
+        workload.ArrivalConfig(kind="diurnal", diurnal_amplitude=1.5)
+    with pytest.raises(ValueError, match="needs a rate_schedule"):
+        workload.ArrivalConfig(kind="trace")
+    with pytest.raises(ValueError, match="start at t=0"):
+        workload.ArrivalConfig(kind="trace", rate_schedule=((1.0, 5.0),))
+    with pytest.raises(ValueError, match="ascending"):
+        workload.ArrivalConfig(kind="trace",
+                               rate_schedule=((0.0, 5.0), (2.0, 1.0),
+                                              (1.0, 3.0)))
+    with pytest.raises(ValueError, match="rate > 0"):
+        workload.ArrivalConfig(kind="trace",
+                               rate_schedule=((0.0, 5.0), (1.0, 0.0)))
+
+
+def test_arrival_times_diurnal_follows_the_day_cycle():
+    """Arrivals are denser on the sinusoid's high half-cycle than its low
+    half-cycle, and deterministic under a fixed rng."""
+    cfg = workload.ArrivalConfig(kind="diurnal", rate_fps=50.0,
+                                 diurnal_period_s=2.0, diurnal_amplitude=0.9)
+    t1 = workload.arrival_times(cfg, 2000, np.random.default_rng(3))
+    t2 = workload.arrival_times(cfg, 2000, np.random.default_rng(3))
+    assert t1 == t2
+    arr = np.asarray(t1)
+    assert np.all(np.diff(arr) > 0)
+    # phase 0: sin > 0 (rate up to 95 fps) on [0, 1), sin < 0 (down to
+    # 5 fps) on [1, 2); count arrivals per half-cycle over several periods
+    phase = np.mod(arr, 2.0)
+    high = int(np.sum(phase < 1.0))
+    low = len(arr) - high
+    assert high > 2.5 * low
+    # rate_at reflects the modulation bounds
+    assert cfg.rate_at(0.5) == pytest.approx(95.0)
+    assert cfg.rate_at(1.5) == pytest.approx(5.0)
+    assert cfg.peak_rate() == pytest.approx(95.0)
+
+
+def test_arrival_times_trace_schedule_piecewise_rates():
+    """A quiet->busy->quiet rate schedule shows up as arrival density per
+    segment (non-homogeneous Poisson by thinning)."""
+    cfg = workload.ArrivalConfig(
+        kind="trace", rate_schedule=((0.0, 2.0), (1.0, 200.0), (2.0, 2.0)))
+    assert cfg.rate_at(0.5) == 2.0 and cfg.rate_at(1.5) == 200.0
+    assert cfg.rate_at(2.5) == 2.0 and cfg.peak_rate() == 200.0
+    arr = np.asarray(workload.arrival_times(cfg, 150,
+                                            np.random.default_rng(5)))
+    busy = int(np.sum((arr >= 1.0) & (arr < 2.0)))
+    # the busy hour produces ~200 arrivals/s, so ~148 of the 150 land there
+    assert busy > 0.8 * len(arr)
+    assert np.all(np.diff(arr) > 0)
 
 
 # -------------------------------------------------------------- device tiers
@@ -495,3 +547,126 @@ def test_replace_spec_toggles_autoscale():
         autoscale=fleet.AutoscaleConfig(max_capacity=4))
     static = dataclasses.replace(spec, autoscale=None)
     assert static.autoscale is None and static.n_streams == 2
+
+
+# ------------------------------------------------- SLA classes in the spec
+
+def test_workload_spec_sla_classes_round_trip(tmp_path):
+    spec = workload.WorkloadSpec(
+        n_streams=6, n_frames=8, seed=1,
+        arrivals=workload.ArrivalConfig(
+            kind="trace", rate_schedule=((0.0, 4.0), (1.0, 40.0))),
+        sla_classes=("interactive", "standard", "gold"),
+        sla_class_defs={"gold": {"priority": 0, "sla_multiplier": 0.4,
+                                 "wait_multiplier": 0.1},
+                        "interactive": {"sla_multiplier": 0.6}},
+        autoscale=fleet.AutoscaleConfig(policy="predictive",
+                                        lookahead_s=0.4),
+        name="classes")
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps(spec.to_dict()))
+    loaded = workload.WorkloadSpec.from_json(str(p))
+    assert loaded == spec
+    table = loaded.resolved_sla_classes()
+    assert table["gold"].priority == 0
+    assert table["interactive"].sla_multiplier == 0.6
+    assert table["interactive"].wait_multiplier == \
+        workload.sla_lib.DEFAULT_SLA_CLASSES["interactive"].wait_multiplier
+
+
+def test_workload_spec_rejects_unknown_sla_class():
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        workload.WorkloadSpec(sla_classes=("platinum",))
+    with pytest.raises(ValueError):
+        workload.WorkloadSpec(sla_classes=())
+
+
+def test_spec_assigns_classes_round_robin_and_builds_priority_runtime():
+    prof, cfg = _profile(), _cfg()
+    spec = workload.WorkloadSpec(n_streams=5, n_frames=3,
+                                 sla_classes=("interactive", "batch"))
+    rt = workload.build_runtime(spec, prof, cfg)
+    assert [s.sla_class for s in rt.streams] == \
+        ["interactive", "batch", "interactive", "batch", "interactive"]
+    assert rt.priority is True
+    # explicit opt-out wins over the auto rule
+    rt_fifo = workload.build_runtime(
+        dataclasses.replace(spec, priority=False), prof, cfg)
+    assert rt_fifo.priority is False
+
+
+# ------------------------------------------------- predictive autoscaling
+
+def test_predictive_autoscaler_decide_math():
+    asc = fleet.Autoscaler(fleet.AutoscaleConfig(
+        min_capacity=1, max_capacity=8, interval_s=0.1, cooldown_s=0.5,
+        policy="predictive", lookahead_s=0.5, ewma_alpha=0.5))
+    # EWMA warm-up: first observation is taken as-is
+    assert asc.observe_rate(10, 0.1) == pytest.approx(100.0)
+    assert asc.observe_rate(0, 0.1) == pytest.approx(50.0)
+    assert asc.observe_service(0.02) == pytest.approx(0.02)
+    # forecast work = backlog 0.5 s + 50 fps * 0.5 s * 0.02 s = 1.0 s over
+    # a 0.5 s lookahead -> 2 executors
+    assert asc.decide_predictive(1.0, 0.5, 1) == 2
+    # cooldown holds after a change
+    assert asc.decide_predictive(1.2, 10.0, 2) == 2
+    # clamping at max
+    assert asc.decide_predictive(2.0, 100.0, 2) == 8
+    # idle -> clamped at min
+    asc2 = fleet.Autoscaler(fleet.AutoscaleConfig(
+        min_capacity=2, max_capacity=8, policy="predictive"))
+    assert asc2.decide_predictive(0.0, 0.0, 4) == 2
+
+
+def test_autoscale_config_predictive_validation():
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(policy="psychic")
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(policy="predictive", lookahead_s=0.0)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(policy="predictive", ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        fleet.AutoscaleConfig(policy="predictive", ewma_alpha=1.5)
+    fleet.AutoscaleConfig(policy="predictive", ewma_alpha=1.0)  # boundary ok
+
+
+def test_predictive_autoscaler_rises_under_burst_and_decays():
+    prof, cfg = _profile(), _cfg(sla_s=1.0)
+    streams = _burst_then_calm_streams(prof)
+    asc = fleet.AutoscaleConfig(min_capacity=1, max_capacity=6,
+                                interval_s=0.02, cooldown_s=0.0,
+                                policy="predictive", lookahead_s=0.05,
+                                ewma_alpha=0.6)
+    rt = fleet.FleetRuntime(prof, cfg, streams,
+                            cloud=fleet.CloudTierConfig(capacity=1,
+                                                        max_batch=1),
+                            autoscaler=asc)
+    fs = rt.run()
+    assert fs.peak_capacity > 1, fs.capacity_timeline
+    assert fs.final_capacity < fs.peak_capacity, fs.capacity_timeline
+    caps = [c for _, c in fs.capacity_timeline]
+    assert max(caps) <= 6 and min(caps) >= 1
+    # re-entrant: EWMA/cooldown state must not leak between runs
+    fs2 = rt.run()
+    assert fs2.capacity_timeline == fs.capacity_timeline
+
+
+def test_predictive_reacts_no_later_than_reactive_on_step_load():
+    """A hard load step: the forecast controller must begin scaling no
+    later than the windowed-utilization controller (the reaction-lag claim
+    behind AutoscaleConfig.policy='predictive')."""
+    prof, cfg = _profile(), _cfg(sla_s=1.0)
+    def first_scale_up(policy):
+        streams = _burst_then_calm_streams(prof)
+        asc = fleet.AutoscaleConfig(
+            min_capacity=1, max_capacity=6, interval_s=0.02, cooldown_s=0.0,
+            high_util=0.7, low_util=0.2,
+            policy=policy, lookahead_s=0.05, ewma_alpha=0.6)
+        fs = fleet.FleetRuntime(prof, cfg, streams,
+                                cloud=fleet.CloudTierConfig(capacity=1,
+                                                            max_batch=1),
+                                autoscaler=asc).run()
+        ups = [t for t, c in fs.capacity_timeline[1:] if c > 1]
+        assert ups, fs.capacity_timeline
+        return ups[0]
+    assert first_scale_up("predictive") <= first_scale_up("utilization")
