@@ -1,17 +1,23 @@
 # Janus reproduction — developer/CI entry points.
 #
-#   make test             fast tier (pytest -m "not slow"; the CI gate)
-#   make test-all         full tier-1 suite
-#   make lint             ruff over the serving stack + benchmarks
-#   make bench-planner    per-decision planner bench -> BENCH_planner.json
-#   make bench-workload   workload-scenario sweep smoke -> BENCH_workload.json
-#   make check-regression fresh BENCH artifacts vs benchmarks/baselines/
-#   make ci               what .github/workflows/ci.yml runs
+#   make test               fast tier (pytest -m "not slow"; the CI gate)
+#   make test-all           full tier-1 suite
+#   make lint               ruff over the whole repo
+#   make bench-planner      per-decision planner bench -> BENCH_planner.json
+#   make bench-workload     workload-scenario sweep smoke -> BENCH_workload.json
+#   make bench-fleet-scale  event-heap core at N<=4096 -> BENCH_fleet_scale.json
+#   make check-regression   fresh BENCH artifacts vs benchmarks/baselines/
+#   make ci                 what .github/workflows/ci.yml runs
+#
+# After an intentional perf change, refresh the committed baselines:
+#   make bench-planner bench-workload bench-fleet-scale
+#   cp BENCH_planner.json BENCH_workload.json BENCH_fleet_scale.json benchmarks/baselines/
 
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-all lint bench-planner bench-workload check-regression ci
+.PHONY: test test-all lint bench-planner bench-workload bench-fleet-scale \
+	check-regression ci
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -21,7 +27,7 @@ test-all:
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
-		ruff check src/repro/serving benchmarks; \
+		ruff check .; \
 	else \
 		echo "ruff not installed; skipping lint (CI installs it)"; \
 	fi
@@ -32,7 +38,10 @@ bench-planner:
 bench-workload:
 	python benchmarks/workload_bench.py --smoke --out BENCH_workload.json
 
+bench-fleet-scale:
+	python benchmarks/fleet_scale_bench.py --out BENCH_fleet_scale.json
+
 check-regression:
 	python benchmarks/check_regression.py
 
-ci: lint test bench-planner bench-workload check-regression
+ci: lint test bench-planner bench-workload bench-fleet-scale check-regression

@@ -14,6 +14,13 @@ against the baselines committed under ``benchmarks/baselines/`` and fails
     Cells are matched by (scenario, streams, frames_per_stream) — a fresh
     run with a different sweep config simply has no matching cells and only
     the structural gates below apply.
+  * **fleet-scale wall clock** (``BENCH_fleet_scale.json``, the event-heap
+    simulator core at N up to 4096 streams): per-(scenario, N) cell,
+    wall-clock-per-simulated-frame at the ``--time-tol`` ratio vs baseline,
+    an absolute per-cell wall budget (``--max-cell-wall-s``; the N=4096 x
+    50-frame cell must stay in single-digit seconds), and — because the
+    simulator is seeded and deterministic — exact completed-frame counts
+    plus violation/drop ratios at the workload tolerance.
   * **structural gates** (claims the artifact must keep making at the
     baseline-pinned fleet sizes): the priority-vs-FIFO cell keeps the
     interactive class's violation ratio strictly below FIFO at equal load;
@@ -33,8 +40,9 @@ Usage (what ``make ci`` / .github/workflows/ci.yml run after the benches):
 
 Regenerating baselines after an intentional perf change:
 
-  make bench-planner bench-workload
-  cp BENCH_planner.json BENCH_workload.json benchmarks/baselines/
+  make bench-planner bench-workload bench-fleet-scale
+  cp BENCH_planner.json BENCH_workload.json BENCH_fleet_scale.json \
+      benchmarks/baselines/
 """
 from __future__ import annotations
 
@@ -105,6 +113,36 @@ def check_planner(gate: Gate, fresh: dict, base: dict, time_tol: float):
     if cur is not None and ref is not None:
         gate.check(cur <= ref * time_tol, "planner fleet wall (tables)",
                    f"{cur:.4f}s vs baseline {ref:.4f}s (tol x{time_tol:g})")
+
+
+# ------------------------------------------------------------ fleet scale
+
+def check_fleet_scale(gate: Gate, fresh: dict, base: dict | None,
+                      time_tol: float, ratio_tol: float,
+                      max_cell_wall_s: float):
+    base_rows = {} if base is None else \
+        {(r["scenario"], r["streams"]): r for r in base.get("rows", [])}
+    for r in fresh.get("rows", []):
+        cell = f"fleet-scale [{r['scenario']} N={r['streams']}]"
+        gate.check(r["wall_s"] <= max_cell_wall_s, f"{cell} wall budget",
+                   f"{r['wall_s']:.2f}s <= {max_cell_wall_s:g}s")
+        b = base_rows.get((r["scenario"], r["streams"]))
+        if b is None or b["frames_per_stream"] != r["frames_per_stream"]:
+            continue
+        gate.check(r["wall_per_frame_us"]
+                   <= b["wall_per_frame_us"] * time_tol,
+                   f"{cell} wall/frame",
+                   f"{r['wall_per_frame_us']:.1f}us vs baseline "
+                   f"{b['wall_per_frame_us']:.1f}us (tol x{time_tol:g})")
+        # seeded + deterministic: the simulated outcome must not drift
+        gate.check(r["completed_frames"] == b["completed_frames"],
+                   f"{cell} completed frames",
+                   f"{r['completed_frames']} == {b['completed_frames']}")
+        for field in ("violation_ratio", "drop_ratio"):
+            gate.check(abs(r[field] - b[field]) <= ratio_tol,
+                       f"{cell} {field}",
+                       f"{r[field]:.4f} vs baseline {b[field]:.4f} "
+                       f"(±{ratio_tol:g})")
 
 
 # --------------------------------------------------------------- workload
@@ -231,8 +269,13 @@ def main(argv=None) -> int:
                     help="fresh planner artifact")
     ap.add_argument("--workload", default="BENCH_workload.json",
                     help="fresh workload artifact")
+    ap.add_argument("--fleet-scale", default="BENCH_fleet_scale.json",
+                    help="fresh fleet-scale artifact")
     ap.add_argument("--baseline-dir", default="benchmarks/baselines",
                     help="directory with committed baseline artifacts")
+    ap.add_argument("--max-cell-wall-s", type=float, default=10.0,
+                    help="absolute wall budget per fleet-scale cell (the "
+                         "N=4096 x 50-frame cell must fit on CI)")
     ap.add_argument("--time-tol", type=float, default=5.0,
                     help="ratio tolerance for wall-clock metrics (CI "
                          "machines vary; default x5)")
@@ -258,9 +301,17 @@ def main(argv=None) -> int:
             check_workload_rows(gate, fresh_w, base_w,
                                 args.ratio_tol, args.latency_tol)
         check_workload_structure(gate, fresh_w, base_w)
-    gate.check(fresh_p is not None and fresh_w is not None,
+
+    fresh_fs = _load(args.fleet_scale, "fresh fleet-scale artifact")
+    base_fs = _load(bdir / "BENCH_fleet_scale.json", "fleet-scale baseline")
+    if fresh_fs is not None:
+        check_fleet_scale(gate, fresh_fs, base_fs, args.time_tol,
+                          args.ratio_tol, args.max_cell_wall_s)
+    gate.check(fresh_p is not None and fresh_w is not None
+               and fresh_fs is not None,
                "fresh artifacts present",
-               f"planner={args.planner} workload={args.workload}")
+               f"planner={args.planner} workload={args.workload} "
+               f"fleet_scale={args.fleet_scale}")
     return gate.report()
 
 

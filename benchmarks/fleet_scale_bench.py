@@ -1,0 +1,140 @@
+"""Fleet-scale benchmark: the event-heap simulator core at thousands of
+streams.
+
+Sweeps the fleet runtime (``repro.serving.simcore`` via ``FleetRuntime.run``)
+over N ∈ {64, 256, 1024, 4096} streams x 50 frames, simulate-only, on the
+paper's ViT-L@384 profile, for two scenarios:
+
+  * ``closed``  — classic closed-loop streams on a shared autoscaling-free
+                  tier (the pure hot-path cell: every frame plans, accounts,
+                  batches, and completes)
+  * ``poisson`` — open-loop Poisson arrivals with ``max_inflight`` admission
+                  control (exercises the drop/pipeline-invalidation path at
+                  scale)
+
+Each cell records simulation wall time and **wall-clock per simulated
+frame** — the scale metric the ROADMAP trajectory tracks. The runtime is
+built outside the timer (profile fitting and planner-table construction are
+one-time, value-cached costs), so the number is the simulator core itself.
+
+``BENCH_fleet_scale.json`` is gated by ``benchmarks/check_regression.py``
+against ``benchmarks/baselines/BENCH_fleet_scale.json``: per-cell
+wall-per-frame at a ratio tolerance, an absolute per-cell wall budget (the
+N=4096 cell must finish in seconds, not minutes), and exact completed-frame
+counts (the simulator is seeded and deterministic).
+
+  PYTHONPATH=src python benchmarks/fleet_scale_bench.py --out BENCH_fleet_scale.json
+  PYTHONPATH=src python benchmarks/fleet_scale_bench.py --smoke   # N<=256
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+try:  # script (``python benchmarks/fleet_scale_bench.py``) vs package (run.py)
+    import common  # noqa: F401  (adds src/ to sys.path)
+except ModuleNotFoundError:
+    from benchmarks import common
+
+from repro.core import engine  # noqa: E402
+from repro.serving import workload  # noqa: E402
+
+SCENARIOS = ("closed", "poisson")
+STREAMS = (64, 256, 1024, 4096)
+
+
+def scenario_spec(name: str, n_streams: int, frames: int,
+                  seed: int) -> workload.WorkloadSpec:
+    wifi = workload.NetworkConfig(network="wifi", mobility="static")
+    if name == "closed":
+        return workload.WorkloadSpec(n_streams=n_streams, n_frames=frames,
+                                     seed=seed, network=wifi)
+    if name == "poisson":
+        return workload.WorkloadSpec(
+            n_streams=n_streams, n_frames=frames, seed=seed, network=wifi,
+            arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=8.0,
+                                            max_inflight=4))
+    raise ValueError(f"unknown scenario {name!r}")
+
+
+def bench_cell(profile, scenario: str, n_streams: int, frames: int,
+               sla_s: float, seed: int) -> dict:
+    spec = scenario_spec(scenario, n_streams, frames, seed)
+    cfg = engine.EngineConfig(sla_s=sla_s, include_scheduler_overhead=False)
+    rt = workload.build_runtime(spec, profile, cfg)
+    t0 = time.perf_counter()
+    fs = rt.run()
+    wall_s = time.perf_counter() - t0
+    completed = len(fs.all_frames)
+    return {
+        "scenario": scenario,
+        "streams": n_streams,
+        "frames_per_stream": frames,
+        "completed_frames": completed,
+        "drop_ratio": fs.drop_ratio,
+        "violation_ratio": fs.violation_ratio,
+        "p99_latency_ms": fs.p99_latency_s * 1e3,
+        "horizon_s": fs.horizon_s,
+        "wall_s": wall_s,
+        "wall_per_frame_us": wall_s / completed * 1e6 if completed else 0.0,
+    }
+
+
+def run_sweep(streams, frames: int, sla_ms: float, seed: int) -> list[dict]:
+    profile = common.paper_profile()
+    rows = []
+    for scenario in SCENARIOS:
+        for n in streams:
+            row = bench_cell(profile, scenario, n, frames, sla_ms / 1e3, seed)
+            rows.append(row)
+            print(f"{scenario:8s} N={n:5d} frames={row['completed_frames']:7d} "
+                  f"drop={row['drop_ratio']:.3f} "
+                  f"viol={row['violation_ratio']:.3f} "
+                  f"wall={row['wall_s']:6.2f}s "
+                  f"per-frame={row['wall_per_frame_us']:6.1f}us")
+    return rows
+
+
+def rows():
+    """``benchmarks/run.py`` hook: one CSV row per scenario at N=256."""
+    profile = common.paper_profile()
+    out = []
+    for scenario in SCENARIOS:
+        r = bench_cell(profile, scenario, 256, 20, 0.3, seed=7)
+        out.append((f"fleet_scale/{scenario}-n256",
+                    r["wall_per_frame_us"],
+                    f"frames={r['completed_frames']} "
+                    f"drop={r['drop_ratio']:.2f} wall={r['wall_s']:.2f}s"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, nargs="+", default=list(STREAMS))
+    ap.add_argument("--frames", type=int, default=50)
+    ap.add_argument("--sla-ms", type=float, default=300.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N <= 256 only (quick local iteration; CI runs the "
+                         "full sweep — the N=4096 cell is the point)")
+    ap.add_argument("--out", default="BENCH_fleet_scale.json")
+    args = ap.parse_args(argv)
+
+    streams = [n for n in args.streams if n <= 256] if args.smoke \
+        else args.streams
+    bench_rows = run_sweep(streams, args.frames, args.sla_ms, args.seed)
+    artifact = {
+        "benchmark": "fleet_scale_bench",
+        "config": {"streams": streams, "frames": args.frames,
+                   "sla_ms": args.sla_ms, "seed": args.seed,
+                   "smoke": args.smoke},
+        "rows": bench_rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[fleet_scale_bench] wrote {len(bench_rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import VITL384, VIDEO_MAE, paper_profile
 from repro.core import bandwidth, engine, pruning, profiler, scheduler
@@ -152,8 +151,8 @@ def table2_overhead():
         trace = bandwidth.synthetic_trace(net, "walking", steps=60, seed=2)
         eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=sla))
         t0 = time.perf_counter()
-        decs = [scheduler.schedule(prof, trace.at(i), trace.rtt_s, sla)
-                for i in range(60)]
+        [scheduler.schedule(prof, trace.at(i), trace.rtt_s, sla)
+         for i in range(60)]
         sched_time = (time.perf_counter() - t0) / 60
         st = eng.run_trace(trace, 60, "janus")
         share = sched_time / max(st.avg_latency_s, 1e-9)

@@ -7,8 +7,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks import (kernel_bench, paper_tables, planner_bench,
-                            roofline_table, workload_bench)
+    from benchmarks import (fleet_scale_bench, kernel_bench, paper_tables,
+                            planner_bench, roofline_table, workload_bench)
 
     print("name,us_per_call,derived")
     for fn in paper_tables.ALL:
@@ -19,6 +19,8 @@ def main() -> None:
     for name, us, derived in planner_bench.rows():
         print(f"{name},{us:.2f},{derived}")
     for name, us, derived in workload_bench.rows():
+        print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in fleet_scale_bench.rows():
         print(f"{name},{us:.2f},{derived}")
     rl = roofline_table.rows()
     if not rl:

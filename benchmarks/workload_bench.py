@@ -146,6 +146,7 @@ def bench_cell(profile, scenario: str, n_streams: int, frames: int,
         "completed_frames": len(fs.all_frames),
         "drop_ratio": fs.drop_ratio,
         "violation_ratio": fs.violation_ratio,
+        "avg_accuracy": fs.avg_accuracy,
         "p50_latency_ms": fs.p50_latency_s * 1e3,
         "p99_latency_ms": fs.p99_latency_s * 1e3,
         "avg_queue_ms": fs.avg_queue_s * 1e3,

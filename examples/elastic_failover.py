@@ -6,13 +6,11 @@ failover (scheduler drives split to device-only when the uplink dies).
 """
 import pathlib
 import sys
-import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.checkpoint import Checkpointer
 from repro.core import bandwidth, engine, profiler, scheduler
 from repro.runtime.fault_tolerance import (HeartbeatMonitor, StragglerDetector,
                                            plan_elastic_mesh)

@@ -70,6 +70,15 @@ class EngineConfig:
     baseline_fixed_r: int = 23  # ToMe max fixed pruning (ViT-L@384; §V-B)
     include_scheduler_overhead: bool = True  # bill Algorithm-1 wall time
     planner: str = "tables"  # "tables" (vectorized) | "legacy" (reference loop)
+    # capture-quality multiplier on the accuracy term (a phone-class camera
+    # degrades accuracy, not just latency; see workload.DeviceTier) — 1.0 is
+    # the identity, so default configs reproduce the unscaled model bit-exact
+    accuracy_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.accuracy_scale <= 0:
+            raise ValueError(
+                f"accuracy_scale must be > 0, got {self.accuracy_scale}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -451,7 +460,8 @@ class JanusEngine:
 
         bd = self.account_breakdown(counts, dec.split, payload_bytes, b_true,
                                     trace.rtt_s)
-        acc = self.acc.accuracy(self.profile.x0, dec.schedule)
+        acc = self.acc.accuracy(self.profile.x0, dec.schedule) \
+            * self.cfg.accuracy_scale
         return FrameStep(decision=dec, breakdown=bd, payload_bytes=payload_bytes,
                          bandwidth_bps=b_true, accuracy=acc, exec_plan=exec_plan)
 

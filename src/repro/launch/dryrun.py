@@ -1,3 +1,4 @@
+# ruff: noqa: E402  (XLA_FLAGS must be set before anything imports jax)
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
@@ -23,7 +24,7 @@ import sys
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401  (initialize jax under the flags set above)
 
 from repro.configs import get_arch, list_archs
 from repro.launch.mesh import make_production_mesh

@@ -1,3 +1,4 @@
+# ruff: noqa: E402  (XLA_FLAGS must be set before anything imports jax)
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 

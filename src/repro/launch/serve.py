@@ -48,10 +48,10 @@ compiled-plan cache.
 from __future__ import annotations
 
 import argparse
+import time
 
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.core import bandwidth, engine, planner, profiler, scheduler
@@ -114,7 +114,9 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
     rt = workload_lib.build_runtime(spec, profile, eng_cfg,
                                     model_cfg=model_cfg, params=params)
     cloud = rt.cloud
+    t0 = time.perf_counter()
     fs = rt.run(images=images)
+    sim_wall = time.perf_counter() - t0
 
     print(f"[fleet] workload={spec.name} streams={spec.n_streams} "
           f"frames/stream={spec.n_frames} policy={spec.policy} "
@@ -148,7 +150,12 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
           f"p99={fs.p99_latency_s*1e3:.1f}ms queue={fs.avg_queue_s*1e3:.2f}ms "
           f"drop%={100*fs.drop_ratio:.1f} "
           f"cloud_util={100*fs.cloud_utilization:.1f}% "
-          f"avg_batch={fs.avg_batch_size:.2f} fps={fs.aggregate_fps:.1f}")
+          f"avg_batch={fs.avg_batch_size:.2f} fps={fs.aggregate_fps:.1f} "
+          f"accuracy={fs.avg_accuracy:.4f}")
+    n_done = len(fs.all_frames)
+    print(f"[fleet simcore] wall={sim_wall:.3f}s "
+          f"per-frame={sim_wall / n_done * 1e6 if n_done else 0.0:.1f}us "
+          f"(event-heap core; see benchmarks/fleet_scale_bench.py)")
     if spec.autoscale is not None:
         print(f"[fleet autoscale] capacity peak={fs.peak_capacity} "
               f"final={fs.final_capacity} "

@@ -9,7 +9,6 @@ each step_fn enters during tracing.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import config_for_shape, get_arch
-from repro.configs.base import ArchSpec, ShapeSpec
+from repro.configs.base import ShapeSpec
 from repro.models import dit as dit_lib
 from repro.models import flux as flux_lib
 from repro.models import lm as lm_lib
@@ -324,7 +323,8 @@ def build_bundle(arch_name: str, shape_name: str, mesh, *, smoke: bool = False,
             from repro.core import pruning as pruning_lib
             sched_j = pruning_lib.make_schedule(
                 "exponential", janus_alpha, cfg.n_layers, cfg.num_tokens)
-            fwd = lambda p, im: vit_lib.forward_janus(p, cfg, im, sched_j)
+            def fwd(p, im):
+                return vit_lib.forward_janus(p, cfg, im, sched_j)
             janus_note = (f" janus_alpha={janus_alpha} "
                           f"(merges {sum(sched_j)}/{cfg.num_tokens} tokens)")
         sh = shape if not smoke else ShapeSpec(shape.name, shape.kind,

@@ -199,10 +199,8 @@ def layer_params(params: dict, l: int) -> dict:
 
 def _unmerge_map(n_before: int, idx: tome.MergeIndices) -> jax.Array:
     """[B, n_before] map: position before merge -> position after merge."""
-    b = idx.src_idx.shape[0]
     r = idx.src_idx.shape[1]
     na = (n_before + 1) // 2
-    n_after = n_before - r
     n_unm = na - r
 
     def one(src_idx, unm_idx, dst_idx):

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.param import ParamSpec
 from repro.runtime.flags import layer_unroll
 from repro.sharding import constrain
 

@@ -7,8 +7,6 @@ fp32 regardless of activation dtype (bf16-safe).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -152,7 +150,8 @@ def _qkv_proj(p, x, n_heads, n_kv, head_dim):
     if "bqkv" in p:
         y = y + p["bqkv"].astype(y.dtype)
     q, k, v = jnp.split(y, 3, axis=-1)
-    rs = lambda t: t.reshape(*t.shape[:-1], n_heads, head_dim)
+    def rs(t):
+        return t.reshape(*t.shape[:-1], n_heads, head_dim)
     return rs(q), rs(k), rs(v)
 
 

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import moe as moe_lib
-from repro.models.param import ParamSpec
 from repro.runtime.flags import layer_unroll
 from repro.sharding import constrain
 

@@ -26,7 +26,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
 from repro.models.param import ParamSpec
 from repro.sharding import constrain
 

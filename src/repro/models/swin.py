@@ -128,7 +128,6 @@ def _win_attention(bp: dict, cfg: SwinConfig, x: jax.Array, heads: int,
     scores = jnp.einsum("wqhd,wkhd->whqk", q, k).astype(jnp.float32) / np.sqrt(hd)
     scores = scores + rel_bias[None].astype(jnp.float32)
     if shift and mask_const is not None:
-        nw = mask_const.shape[0]
         m = jnp.tile(mask_const, (b, 1, 1))[:, None]  # [B*nW, 1, n, n]
         scores = jnp.where(m, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)

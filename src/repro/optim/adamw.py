@@ -8,7 +8,6 @@ default, or fp32 masters via ``master_fp32``). ``abstract_state`` mirrors
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,8 @@ def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_state(params) -> dict:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros32, params),
         "v": jax.tree.map(zeros32, params),
@@ -48,7 +48,8 @@ def init_state(params) -> dict:
 
 
 def abstract_state(abstract_params) -> dict:
-    sds32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def sds32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(sds32, abstract_params),
         "v": jax.tree.map(sds32, abstract_params),

@@ -116,6 +116,12 @@ class MicroBatcher:
         self.max_wait_s = max_wait_s
         self.pending: list[Request] = []
 
+    @property
+    def pending_count(self) -> int:
+        """Number of pending requests (O(1); the event-heap fleet core polls
+        this every control tick, where building ``pending`` would allocate)."""
+        return len(self.pending)
+
     def offer(self, req: Request, now: float) -> list[Request] | None:
         self.pending.append(req)
         if len(self.pending) >= self.max_batch:
@@ -228,6 +234,11 @@ class PriorityMicroBatcher:
     @property
     def pending(self) -> list[Request]:
         return [p.req for p in self._pending]
+
+    @property
+    def pending_count(self) -> int:
+        """O(1) pending size — unlike ``pending``, no list materialization."""
+        return len(self._pending)
 
     def _key(self, p: _Lane, now: float):
         aged = p.rank - int((now - p.req.arrival_s) / self.aging_s)

@@ -24,6 +24,15 @@ The per-frame physics is exactly the single-stream engine's
 ``max_batch=1`` and free capacity the fleet reproduces ``JanusEngine.
 run_trace`` numbers identically — tested in ``tests/test_serving_fleet.py``.
 
+``run()`` executes on the event-heap simulator core
+(``repro.serving.simcore``): the same discrete-event semantics with planner
+decisions batched per (tier, profile) group and per-stream state in
+preallocated arrays, so simulation cost scales with *events* rather than
+``streams x frames x Python overhead`` (thousands of streams per sweep;
+``benchmarks/fleet_scale_bench.py``). The retired per-frame loop survives as
+``run_reference()``, the bit-exactness oracle for ``tests/test_simcore.py``
+— it is not a production path.
+
 Simulation model (discrete-event, one heap):
 
   frame start t0 (closed loop: previous frame done, or the stream period)
@@ -113,6 +122,9 @@ class StreamSpec:
     sla_class: str = sla_lib.DEFAULT_CLASS
     # SLA class (repro.serving.sla): scales the stream's SLA budget and
     # drives priority admission in the shared tier's micro-batcher
+    accuracy_scale: float = 1.0  # capture-quality multiplier on the accuracy
+    # term (set from the device tier: a phone-class camera degrades accuracy,
+    # not just latency); 1.0 reproduces the unscaled model bit-exact
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,6 +312,10 @@ class ClassStats:
         return self.stats.avg_queue_s
 
     @property
+    def avg_accuracy(self) -> float:
+        return self.stats.avg_accuracy
+
+    @property
     def drop_ratio(self) -> float:
         offered = self.frames + self.dropped
         return self.dropped / offered if offered else 0.0
@@ -349,6 +365,12 @@ class FleetStats:
     @property
     def avg_queue_s(self) -> float:
         return self.aggregate.avg_queue_s
+
+    @property
+    def avg_accuracy(self) -> float:
+        """Mean accuracy over all completed frames — per-tier capture-quality
+        multipliers (``workload.DeviceTier.accuracy_scale``) land here."""
+        return self.aggregate.avg_accuracy
 
     @property
     def capacity_seconds(self) -> float:
@@ -480,7 +502,9 @@ class FleetRuntime:
                             sla_s=(base_cfg.sla_s if s.sla_s is None
                                    else s.sla_s)
                             * sla_lib.resolve_sla_class(
-                                s.sla_class, self.sla_classes).sla_multiplier),
+                                s.sla_class, self.sla_classes).sla_multiplier,
+                            accuracy_scale=base_cfg.accuracy_scale
+                            * s.accuracy_scale),
                         acc_model=acc, model_cfg=model_cfg, params=params,
                         plan_cache=self.plan_cache)
             for s in streams
@@ -488,6 +512,19 @@ class FleetRuntime:
         self._execute = base_cfg.execute and params is not None
 
     def run(self, images=None) -> FleetStats:
+        """Run the fleet on the event-heap simulator core
+        (``repro.serving.simcore``): identical semantics to the retired
+        per-frame loop (kept below as ``run_reference``), with planner
+        decisions batched per (tier, profile) group so simulation cost
+        scales with events, not frames x Python overhead."""
+        from repro.serving import simcore
+        return simcore.simulate(self, images=images)
+
+    def run_reference(self, images=None) -> FleetStats:
+        """The retired per-frame event loop, kept verbatim as the parity
+        oracle: ``tests/test_simcore.py`` asserts ``run()`` reproduces this
+        loop's ``FleetStats`` bit for bit on the seed scenarios. One
+        ``plan_frame`` Python call per frame — do not use at scale."""
         streams, cloud = self.streams, self.cloud
         estimators = [HarmonicMeanEstimator(cold_start_bps=float(np.mean(s.trace.bps)))
                       for s in streams]

@@ -1,0 +1,682 @@
+"""Event-heap simulator core for the fleet runtime: cost scales with events.
+
+``fleet.FleetRuntime.run`` delegates here. The retired per-frame loop (kept
+as ``FleetRuntime.run_reference``, the parity oracle) paid one
+``JanusEngine.plan_frame`` Python call per frame — estimator bookkeeping, an
+``(A, S)`` planner eval, several small-numpy accounting calls, and a handful
+of dataclass allocations — per stream per frame. At fleet scale (thousands
+of streams, ``benchmarks/fleet_scale_bench.py``) that per-frame Python
+overhead, not the event count, dominated wall time.
+
+This core keeps the discrete-event structure — one heap carrying arrival,
+device+uplink-done, cloud-batch-done, batcher-poll, and autoscale-tick
+events, with the micro-batcher (FIFO or priority) and autoscaler objects
+reused verbatim so their semantics cannot drift — and removes the per-frame
+Python from the hot path:
+
+  * **Batched planner decisions.** Streams are grouped per (planner tables,
+    rtt, SLA, policy) — i.e. per (device tier / profile) — and each group's
+    Algorithm-1 decisions are evaluated as one chunked ``(R, A, S)`` matrix
+    eval over the group's bandwidth-estimate vector instead of R separate
+    ``PlannerTables.decide`` calls. One matrix eval per decision epoch.
+  * **Precomputed estimate sequences.** The harmonic-mean estimator only
+    ever sees the stream's own admitted-frame trace values, so each stream's
+    estimate sequence is computed vectorized up front (bit-exact, including
+    the cold start and the <5-observation partial windows). It is
+    *re*-computed — in one small vectorized chunk — only when an admission
+    drop invalidates the speculated observation order; the next pending
+    decision stays valid across a drop (it depends only on committed
+    observations), so consecutive drops cost O(1) each.
+  * **Table-lookup accounting.** Per-(α, split) device/cloud phase latency,
+    payload, and accuracy tables are built once per planner-tables instance
+    with the exact float-op order of ``JanusEngine.account_breakdown``, so
+    per-frame accounting is scalar arithmetic on plain floats.
+  * **Flat state, deferred objects.** Each stream's decision pipeline —
+    per-frame (α, split), phase latencies, payload, accuracy — is resolved
+    from the batched evals into preallocated arrays up front; per-frame
+    admission is then scalar arithmetic, and completed frames accumulate as
+    plain tuples. ``FrameResult``/``RunStats`` objects are materialized once
+    at the end, in the retired loop's per-stream completion order.
+
+Bit-exactness contract: with ``include_scheduler_overhead=False`` this core
+reproduces the retired loop's ``FleetStats`` bit for bit (latencies, queue
+delays, violation/drop ratios, percentiles, per-class stats, batch sizes,
+capacity timeline) on closed-loop, Poisson-overload, MMPP-burst, and
+SLA-mix scenarios — tested in ``tests/test_simcore.py``. With overhead
+billing on, the vectorized path bills the *amortized* measured wall time of
+the batched eval per decision (the retired loop billed each decision's own
+measured wall time — equally wall-clock-dependent, differently sliced).
+
+The engine-backed slow path (``execute=True`` with images, or
+``planner="legacy"``) runs the same event machinery with per-frame
+``plan_frame`` calls, so real-math micro-batched cloud execution and the
+legacy-planner comparison benches keep their exact semantics. The fallback
+is per stream: a stream whose arrival times are not sorted (so its frames
+do not arrive in index order) drops back to an engine-planned stream inside
+the same simulation.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+
+import numpy as np
+
+from repro.core.bandwidth import HarmonicMeanEstimator
+from repro.core.engine import FrameResult, RunStats, run_cloud_batch
+from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
+
+# event kinds (heap entries are (time, seq, kind, payload) tuples; seq is the
+# global tie-break, assigned in push order exactly like the retired loop's)
+ARRIVE, OFFER, POLL, FINISH, CONTROL = 0, 1, 2, 3, 4
+EVENT_NAMES = ("arrive", "offer", "poll", "finish", "control")
+
+_WINDOW = 5          # HarmonicMeanEstimator's observation window
+_CHUNK_MIN, _CHUNK_MAX = 4, 64   # post-drop refill sizing (adaptive)
+_EVAL_ELEMS = 1_000_000          # max elements per (R, A, S) eval chunk
+# (~8 MB of float64 per chunk buffer: small enough to stay cache-warm
+# across the eval's several passes, large enough to amortize numpy overhead)
+
+_POLICIES = ("janus", "device", "cloud", "mixed")
+_TABLES, _CONST, _MIXED = 0, 1, 2   # pipe kinds
+
+
+# ---------------------------------------------------------------------------
+# accounting tables (exact account_breakdown float-op order, per tables)
+# ---------------------------------------------------------------------------
+
+
+class AcctTables:
+    """Per-(α, split) phase-accounting tables for one ``PlannerTables``.
+
+    ``dev[a, j]`` / ``cloud[a, j]`` reproduce ``account_breakdown``'s
+    device/cloud phase values bit-exact: each column is built with the same
+    slice-then-``np.sum`` float order the engine uses per frame (verified in
+    ``tests/test_simcore.py``). ``payload``/``bits`` are reused from the
+    planner tables (identical single-multiply construction), and ``acc[a]``
+    is the accuracy model evaluated once per α row.
+    """
+
+    __slots__ = ("tables", "dev", "cloud", "payload", "bits", "acc",
+                 "alpha", "cand", "raw8", "n", "device_only_split")
+
+    def __init__(self, tables, acc_model):
+        p = tables.profile
+        n = p.n_layers
+        counts = tables.counts.astype(np.float64)
+        dev_lat = p.device.predict(counts[:, :n])
+        cloud_lat = p.cloud.predict(counts[:, :n])
+        a_n, s_n = tables.dev_s.shape
+        dev = np.zeros((a_n, s_n))
+        cloud = np.zeros((a_n, s_n))
+        for j, s in enumerate(tables.candidates):
+            s = int(s)
+            if s == 0:
+                cloud[:, j] = p.cloud_embed_s + np.sum(cloud_lat, axis=1) \
+                    + p.head_s
+            elif s == n + 1:
+                dev[:, j] = p.device_embed_s + np.sum(dev_lat, axis=1) \
+                    + p.head_s
+            else:
+                dev[:, j] = p.device_embed_s + np.sum(dev_lat[:, :s], axis=1)
+                cloud[:, j] = np.sum(cloud_lat[:, s:], axis=1) + p.head_s
+        self.tables = tables
+        self.dev = dev
+        self.cloud = cloud
+        self.payload = tables.payload
+        self.bits = tables.bits
+        self.acc = np.asarray([acc_model.accuracy(p.x0, sched)
+                               for sched in tables.schedules])
+        self.alpha = tables.alpha_grid
+        self.cand = tables.candidates.astype(np.int64)
+        self.raw8 = float(p.raw_input_bytes * 8)
+        self.n = n
+        self.device_only_split = n + 1
+
+    def decide_batch(self, est: np.ndarray, rtt_s: float,
+                     sla_s: float) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``PlannerTables.decide`` over a bandwidth-estimate
+        vector: returns (α-index, split-index) per row with exactly the
+        scalar path's semantics (first-min split tie-break, first-feasible
+        α, global-argmin fallback)."""
+        t = self.tables
+        a_out = np.empty(len(est), dtype=np.int64)
+        j_out = np.empty(len(est), dtype=np.int64)
+        a_n, s_n = t.dev_s.shape
+        step = max(1, _EVAL_ELEMS // (a_n * s_n))
+        # fixed per-(α, split) part of the latency matrix: dev + rtt·mask +
+        # cloud. Scalar decide computes (dev + (bits/b + rtt·mask)) + cloud;
+        # regrouping to bits/b + (dev + rtt·mask + cloud) would NOT be
+        # bit-identical, so keep the exact op order below and only hoist the
+        # chunk buffer (in-place ops reuse it; IEEE addition is commutative
+        # in value, so a+buf == buf+a bit-exact).
+        rtt_term = (rtt_s * t.rtt_mask)[None, None, :]
+        buf = np.empty((step, a_n, s_n))
+        for lo in range(0, len(est), step):
+            e = est[lo:lo + step, None, None]
+            out = buf[:len(e)]
+            np.divide(t.bits[None], e, out=out)      # bits/b
+            np.add(out, rtt_term, out=out)           # comm = bits/b + rtt·mask
+            np.add(out, t.dev_s[None], out=out)      # dev + comm
+            np.add(out, t.cloud_s[None], out=out)    # (dev + comm) + cloud
+            best_j = np.argmin(out, axis=2)
+            best_lat = np.take_along_axis(out, best_j[:, :, None],
+                                          axis=2)[:, :, 0]
+            feasible = best_lat <= sla_s
+            has = feasible.any(axis=1)
+            a = np.where(has, feasible.argmax(axis=1), best_lat.argmin(axis=1))
+            a_out[lo:lo + step] = a
+            j_out[lo:lo + step] = np.take_along_axis(
+                best_j, a[:, None], axis=1)[:, 0]
+        return a_out, j_out
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-estimate sequences (exact HarmonicMeanEstimator semantics)
+# ---------------------------------------------------------------------------
+
+
+def window_estimates(obs: np.ndarray, cold: np.ndarray) -> np.ndarray:
+    """Estimate before each frame for streams observing ``obs`` row-wise in
+    order (all values positive): bit-exact ``HarmonicMeanEstimator`` —
+    left-to-right window sums over the last ≤5 inverse observations, cold
+    start before the first."""
+    n_streams, frames = obs.shape
+    inv = 1.0 / obs
+    est = np.empty_like(obs)
+    est[:, 0] = cold
+    p = None
+    for k in range(1, min(_WINDOW, frames)):
+        p = inv[:, 0].copy() if k == 1 else p + inv[:, k - 1]
+        est[:, k] = k / p
+    if frames > _WINDOW:
+        w = inv[:, 0:frames - _WINDOW]
+        for d in range(1, _WINDOW):
+            w = w + inv[:, d:frames - _WINDOW + d]
+        est[:, _WINDOW:] = float(_WINDOW) / w
+    return est
+
+
+def _est_exact(window: list[float], cold: float,
+               obs_spec: list[float]) -> list[float]:
+    """Scalar fallback/refill path: estimate before each speculated frame,
+    replicating the estimator exactly (including skipping non-positive
+    observations). ``window`` is the committed last ≤5 positive observations,
+    oldest first; it is not mutated."""
+    win = list(window)
+    out = []
+    for b in obs_spec:
+        if win:
+            s = 0.0
+            for v in win:
+                s += 1.0 / v
+            out.append(len(win) / s)
+        else:
+            out.append(cold)
+        if b > 0:
+            win.append(b)
+            if len(win) > _WINDOW:
+                win.pop(0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-stream decision pipelines
+# ---------------------------------------------------------------------------
+
+
+class _Pipe:
+    """Precomputed decision pipeline for one stream (see module docstring).
+
+    Entries are indexed by *planned order*: entry ``pos`` is the decision for
+    the stream's next admitted frame and depends only on already-committed
+    observations, so it survives admission drops; entries past it speculate
+    that arrivals are admitted consecutively and are invalidated (``valid``
+    truncated) when a drop shifts the observation sequence.
+    """
+
+    __slots__ = ("kind", "frames", "obs", "cold", "window", "arrived", "pos",
+                 "valid", "chunk", "acct", "rtt", "sla", "acc_scale",
+                 "bill_overhead", "ov",
+                 "alpha", "split", "dev", "cloudp", "bits", "payload", "acc",
+                 "const_dev_total", "const_cloud", "const_acc", "const_split")
+
+    def __init__(self, kind: int, frames: int, obs: list[float], cold: float,
+                 acct: AcctTables, rtt: float, sla: float, acc_scale: float,
+                 bill_overhead: bool):
+        self.kind = kind
+        self.frames = frames
+        self.obs = obs             # trace value per frame index (plain floats)
+        self.cold = cold
+        self.window = []           # committed last ≤5 positive observations
+        self.arrived = 0           # arrivals consumed (admitted + dropped)
+        self.pos = 0
+        self.valid = 0
+        self.chunk = 16
+        self.acct = acct
+        self.rtt = rtt
+        self.sla = sla
+        self.acc_scale = acc_scale
+        self.bill_overhead = bill_overhead
+        self.ov = 0.0              # amortized per-decision overhead billed
+        self.alpha = self.split = self.dev = self.cloudp = None
+        self.bits = self.payload = self.acc = None
+        self.const_dev_total = self.const_cloud = 0.0
+        self.const_acc = 0.0
+        self.const_split = 0
+
+    # -- filling -------------------------------------------------------------
+    def load_rows(self, a_idx: np.ndarray, j_idx: np.ndarray) -> None:
+        """Install decisions (tables kind): resolve every per-frame quantity
+        to plain-float lists so admission is scalar arithmetic."""
+        t = self.acct
+        self.alpha = t.alpha[a_idx].tolist()
+        self.split = t.cand[j_idx].tolist()
+        self.dev = t.dev[a_idx, j_idx].tolist()
+        self.cloudp = t.cloud[a_idx, j_idx].tolist()
+        self.bits = t.bits[a_idx, j_idx].tolist()
+        self.payload = t.payload[a_idx, j_idx].tolist()
+        self.acc = (t.acc[a_idx] * self.acc_scale).tolist()
+        self.pos = 0
+        self.valid = len(self.alpha)
+
+    def load_mixed(self, splits: np.ndarray) -> None:
+        self.split = splits.tolist()
+        self.pos = 0
+        self.valid = len(self.split)
+
+    def _refill(self) -> None:
+        t0 = time.perf_counter() if self.bill_overhead else 0.0
+        # take() only runs for an admitted frame, so arrived < frames here
+        count = min(self.chunk, self.frames - self.arrived)
+        self.chunk = min(_CHUNK_MAX, self.chunk * 2)
+        obs_spec = [self.obs[f]
+                    for f in range(self.arrived, self.arrived + count)]
+        est = np.asarray(_est_exact(self.window, self.cold, obs_spec))
+        if self.kind == _TABLES:
+            a_idx, j_idx = self.acct.decide_batch(est, self.rtt, self.sla)
+            self.load_rows(a_idx, j_idx)
+        else:  # mixed baseline: endpoint choice per estimate
+            lat_c = (self.acct.raw8 / est + self.rtt) + self.const_cloud
+            self.load_mixed(np.where(self.const_dev_total <= lat_c,
+                                     self.acct.device_only_split, 0))
+        if self.bill_overhead:
+            self.ov = (time.perf_counter() - t0) / count
+
+    # -- event hooks ---------------------------------------------------------
+    def on_drop(self) -> None:
+        """An arrival was rejected: it never observes, so every speculated
+        entry past the next pending decision is stale. Constant-decision
+        (device/cloud baseline) pipes never speculate, so nothing expires."""
+        self.arrived += 1
+        if self.kind != _CONST and self.valid > self.pos + 1:
+            self.valid = self.pos + 1
+            self.chunk = max(_CHUNK_MIN, self.chunk // 2)
+
+    def take(self, fi: int):
+        """Consume the next decision for admitted frame ``fi``. Returns
+        ``(dev_s, comm_s, cloud_s, overhead_s, alpha, split, accuracy,
+        payload_bytes, bandwidth_bps)``."""
+        if self.pos >= self.valid:
+            self._refill()
+        k = self.pos
+        self.pos = k + 1
+        self.arrived += 1
+        b = self.obs[fi]
+        if b > 0:
+            self.window.append(b)
+            if len(self.window) > _WINDOW:
+                self.window.pop(0)
+        acct = self.acct
+        if self.kind == _TABLES:
+            split = self.split[k]
+            if split == 0:
+                comm = acct.raw8 / b + self.rtt
+            elif split == acct.device_only_split:
+                comm = 0.0
+            else:
+                comm = self.bits[k] / b + self.rtt
+            return (self.dev[k], comm, self.cloudp[k], self.ov,
+                    self.alpha[k], split, self.acc[k], self.payload[k], b)
+        split = self.const_split if self.kind == _CONST else self.split[k]
+        if split == 0:
+            return (0.0, acct.raw8 / b + self.rtt, self.const_cloud, 0.0,
+                    0.0, split, self.const_acc, 0.0, b)
+        return (self.const_dev_total, 0.0, 0.0, 0.0,
+                0.0, split, self.const_acc, 0.0, b)
+
+
+def _build_pipes(rt) -> list:
+    """One pipeline per stream (or ``None`` for streams that must take the
+    engine-planned slow path), with the initial decisions of every regular
+    stream filled by one batched eval per (tables, rtt, SLA, policy) group."""
+    acct_cache: dict[int, AcctTables] = {}
+    pipes: list = []
+    groups: dict[tuple, list[_Pipe]] = {}
+    for si, spec in enumerate(rt.streams):
+        eng = rt.engines[si]
+        if spec.policy not in _POLICIES:
+            raise ValueError(spec.policy)
+        if spec.arrival_times is not None:
+            ats = spec.arrival_times[:spec.n_frames]
+            if any(b < a for a, b in zip(ats, ats[1:])):
+                pipes.append(None)   # frames arrive out of index order
+                continue
+            frames = min(spec.n_frames, len(spec.arrival_times))
+        else:
+            frames = max(1, spec.n_frames)
+        tables = eng.tables
+        acct = acct_cache.get(id(tables))
+        if acct is None:
+            acct = acct_cache[id(tables)] = AcctTables(tables, eng.acc)
+        bps = np.asarray(spec.trace.bps, dtype=np.float64)
+        obs_arr = bps[np.arange(frames) % len(bps)]
+        cold = float(np.mean(spec.trace.bps))
+        rtt = float(spec.trace.rtt_s)
+        sla = float(eng.cfg.sla_s)
+        bill = bool(eng.cfg.include_scheduler_overhead)
+        if spec.policy == "janus":
+            kind = _TABLES
+        elif spec.policy == "mixed":
+            kind = _MIXED
+        else:
+            kind = _CONST
+        # only tables (janus) decisions bill amortized overhead: the
+        # reference path's baseline Decisions carry scheduler_overhead_s=0.0
+        pipe = _Pipe(kind, frames, obs_arr.tolist(), cold, acct, rtt, sla,
+                     float(eng.cfg.accuracy_scale),
+                     bill and kind == _TABLES)
+        if kind != _TABLES:
+            # baseline constants (also used by the mixed refill path); built
+            # through account_breakdown itself so the float order is the
+            # engine's by construction
+            fc = eng._fixed_counts
+            n = acct.n
+            pipe.const_dev_total = eng.account_breakdown(
+                fc, n + 1, 0.0, 1.0, rtt).device_s
+            pipe.const_cloud = eng.account_breakdown(
+                fc, 0, 0.0, 1.0, rtt).cloud_s
+            pipe.const_acc = eng.acc.accuracy(eng.profile.x0,
+                                              eng._fixed_schedule) \
+                * eng.cfg.accuracy_scale
+            pipe.const_split = n + 1 if spec.policy == "device" else 0
+        pipes.append(pipe)
+        if kind == _CONST:
+            pipe.valid = pipe.frames   # constant decision: never refills
+            continue
+        if frames == 0:
+            continue   # empty arrival list: the stream never plans a frame
+        if np.all(obs_arr > 0):
+            groups.setdefault(
+                (id(tables), rtt, sla, spec.policy, frames), []).append(pipe)
+        # else: non-positive trace values are skipped by the estimator —
+        # leave the pipe empty so take() routes through the exact scalar
+        # refill path
+
+    for (_, rtt, sla, policy, frames), members in groups.items():
+        t0 = time.perf_counter()
+        obs2d = np.asarray([p.obs for p in members])
+        est2d = window_estimates(obs2d, np.asarray([p.cold for p in members]))
+        acct = members[0].acct
+        if policy == "janus":
+            a_idx, j_idx = acct.decide_batch(est2d.ravel(), rtt, sla)
+            a_idx = a_idx.reshape(len(members), frames)
+            j_idx = j_idx.reshape(len(members), frames)
+            for i, p in enumerate(members):
+                p.load_rows(a_idx[i], j_idx[i])
+        else:  # mixed
+            for i, p in enumerate(members):
+                lat_c = (acct.raw8 / est2d[i] + rtt) + p.const_cloud
+                p.load_mixed(np.where(p.const_dev_total <= lat_c,
+                                      acct.device_only_split, 0))
+        if members[0].bill_overhead:
+            ov = (time.perf_counter() - t0) / (len(members) * frames)
+            for p in members:
+                p.ov = ov
+    return pipes
+
+
+# ---------------------------------------------------------------------------
+# the simulation
+# ---------------------------------------------------------------------------
+
+
+def simulate(rt, images=None, record: list | None = None):
+    """Run ``rt`` (a ``fleet.FleetRuntime``) through the event-heap core and
+    return its ``FleetStats``. ``record``, if given, collects every popped
+    event as ``(time, kind, payload)`` — the determinism test asserts two
+    seeded runs produce identical event sequences."""
+    from repro.serving.fleet import Autoscaler, FleetStats
+
+    streams, cloud = rt.streams, rt.cloud
+    n_streams = len(streams)
+    engine_mode = (rt._execute and images is not None) or \
+        any(e.cfg.planner == "legacy" for e in rt.engines)
+    pipes = [None] * n_streams if engine_mode else _build_pipes(rt)
+    estimators = [None] * n_streams
+    for si, spec in enumerate(streams):
+        if pipes[si] is None:
+            estimators[si] = HarmonicMeanEstimator(
+                cold_start_bps=float(np.mean(spec.trace.bps)))
+    sla_eff = [e.cfg.sla_s for e in rt.engines]
+
+    # -- per-stream mutable state (flat, O(1) access) ------------------------
+    # results accumulate per stream in completion order (the retired loop's
+    # order); each entry is the finished frame's scalar tuple, materialized
+    # into FrameResult objects once at the end
+    results: list[list[tuple]] = [[] for _ in streams]
+    device_free = [0.0] * n_streams
+    inflight = [0] * n_streams
+    dropped = [0] * n_streams
+
+    # per admitted frame: (si, fi, t0, dev_s, comm_s, cloud_s, overhead_s,
+    # alpha, split, acc, payload, b_true); index = rid
+    recs: list[tuple] = []
+    exec_plans: list = []
+    batch_sizes: list[int] = []
+
+    if rt.priority:
+        micro = PriorityMicroBatcher(cloud.max_batch, cloud.max_wait_s,
+                                     classes=rt.sla_classes)
+    else:
+        micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
+    executors: list[float] = []      # busy-until heap, capped at capacity
+    seq = itertools.count()
+    events: list = []                # (time, seq, kind, payload)
+    scaler = Autoscaler(rt.autoscaler.cfg) if rt.autoscaler else None
+    capacity0 = scaler.initial_capacity(cloud.capacity) if scaler \
+        else cloud.capacity
+    service_intervals: list[tuple[float, float]] = []
+    state = {"busy": 0.0, "horizon": 0.0, "capacity": capacity0,
+             "cloud_arrivals": 0,
+             "remaining": sum(
+                 s.n_frames if s.arrival_times is None
+                 else min(s.n_frames, len(s.arrival_times))
+                 for s in streams)}
+    cap_timeline: list[tuple[float, int]] = [(0.0, capacity0)]
+
+    def push(t: float, kind: int, payload) -> None:
+        heapq.heappush(events, (t, next(seq), kind, payload))
+
+    def arrive(si: int, fi: int, t0: float) -> None:
+        spec = streams[si]
+        if spec.max_inflight and inflight[si] >= spec.max_inflight:
+            dropped[si] += 1
+            state["remaining"] -= 1
+            if pipes[si] is not None:
+                pipes[si].on_drop()
+            return
+        inflight[si] += 1
+        plan_frame(si, fi, t0)
+
+    def plan_frame(si: int, fi: int, t0: float) -> None:
+        pipe = pipes[si]
+        if pipe is not None:
+            (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
+             b_true) = pipe.take(fi)
+            plan = None
+        else:
+            eng, spec = rt.engines[si], streams[si]
+            step = eng.plan_frame(fi, spec.trace, spec.policy,
+                                  estimators[si], images=images,
+                                  defer_cloud=True)
+            estimators[si].observe(step.bandwidth_bps)
+            bd = step.breakdown
+            dev_s, comm_s, cloud_s = bd.device_s, bd.comm_s, bd.cloud_s
+            ov = eng.overhead_s(step)
+            alpha, split = step.decision.alpha, step.decision.split
+            acc, payload = step.accuracy, step.payload_bytes
+            b_true, plan = step.bandwidth_bps, step.exec_plan
+        dev_start = max(t0, device_free[si])
+        device_free[si] = dev_start + ov + dev_s
+        local_done = device_free[si] + comm_s
+        rid = len(recs)
+        recs.append((si, fi, t0, dev_s, comm_s, cloud_s, ov, alpha, split,
+                     acc, payload, b_true))
+        if engine_mode:
+            exec_plans.append(plan)
+        if cloud_s <= 0.0:            # device-only: never touches the cloud
+            push(local_done, FINISH, rid)
+        else:
+            push(local_done, OFFER, rid)
+
+    def offer(rid: int, now: float) -> None:
+        state["cloud_arrivals"] += 1
+        rec = recs[rid]
+        si = rec[0]
+        req = Request(rid, arrival_s=now, sla_class=streams[si].sla_class,
+                      deadline_s=rec[2] + sla_eff[si])
+        batch = micro.offer(req, now)
+        if batch is not None:
+            dispatch(batch, now)
+        elif rt.priority:
+            # class windows can pull the flush earlier on every offer
+            push(max(micro.deadline(), now), POLL, 0)
+        elif micro.pending_count == 1:
+            # FIFO: one expiry timer per batch (deadline never moves)
+            push(micro.deadline(), POLL, 0)
+
+    def poll(now: float) -> None:
+        batch = micro.poll(now)
+        if batch is not None:
+            dispatch(batch, now)
+
+    def dispatch(batch: list[Request], now: float) -> None:
+        members = [r.rid for r in batch]
+        if rt._execute and engine_mode:
+            run_cloud_batch(rt.plan_cache, rt.model_cfg, rt.params,
+                            [exec_plans[rid] for rid in members])
+        service = max(recs[rid][5] for rid in members) \
+            * (1.0 + cloud.batch_growth * (len(batch) - 1))
+        while len(executors) > state["capacity"] and executors[0] <= now:
+            heapq.heappop(executors)
+        if len(executors) < state["capacity"]:
+            start = now
+        else:
+            start = max(now, heapq.heappop(executors))
+        heapq.heappush(executors, start + service)
+        state["busy"] += service
+        if scaler is not None:
+            if scaler.cfg.policy != "predictive":
+                service_intervals.append((start, start + service))
+            scaler.observe_service(service / len(batch))
+        batch_sizes.append(len(batch))
+        done = start + service
+        for rid in members:
+            push(done, FINISH, rid)
+
+    def finish(rid: int, tf: float) -> None:
+        (si, fi, t0, dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
+         b_true) = recs[rid]
+        total_s = dev_s + comm_s + cloud_s
+        standalone = total_s + ov
+        queue_s = tf - t0 - standalone
+        if queue_s < 1e-12:
+            queue_s = 0.0
+        lat = total_s + ov + queue_s
+        sla = sla_eff[si]
+        lg = exec_plans[rid].logits \
+            if engine_mode and exec_plans[rid] is not None else None
+        results[si].append(
+            (lat, lat > sla, max(0.0, (lat - sla) / sla) if sla else 0.0,
+             alpha, split, acc, payload, b_true, queue_s, lg))
+        state["horizon"] = max(state["horizon"], tf)
+        state["remaining"] -= 1
+        inflight[si] -= 1
+        spec = streams[si]
+        if spec.arrival_times is None and fi + 1 < spec.n_frames:
+            arrive(si, fi + 1, max(tf, t0 + spec.period_s))
+
+    def set_capacity(newc: int, now: float) -> None:
+        if newc == state["capacity"]:
+            return
+        while len(executors) > newc and executors[0] <= now:
+            heapq.heappop(executors)
+        state["capacity"] = newc
+        cap_timeline.append((now, newc))
+
+    def control(now: float) -> None:
+        window = scaler.cfg.interval_s
+        if scaler.cfg.policy == "predictive":
+            scaler.observe_rate(state["cloud_arrivals"], window)
+            state["cloud_arrivals"] = 0
+            backlog = sum(max(0.0, e - now) for e in executors)
+            backlog += micro.pending_count * (scaler.ewma_service_s or 0.0)
+            newc = scaler.decide_predictive(now, backlog, state["capacity"])
+        else:
+            w0, busy, keep = now - window, 0.0, []
+            for s, e in service_intervals:
+                busy += max(0.0, min(e, now) - max(s, w0))
+                if e > now:
+                    keep.append((s, e))
+            service_intervals[:] = keep
+            util = busy / (state["capacity"] * window)
+            newc = scaler.decide(now, util, state["capacity"])
+        set_capacity(newc, now)
+        if state["remaining"] > 0:
+            push(now + window, CONTROL, 0)
+
+    for si, spec in enumerate(streams):
+        if spec.arrival_times is None:
+            arrive(si, 0, 0.0)
+        else:
+            for fi, ta in enumerate(spec.arrival_times[:spec.n_frames]):
+                push(float(ta), ARRIVE, (si, fi))
+    if scaler is not None:
+        push(scaler.cfg.interval_s, CONTROL, 0)
+
+    while True:
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+            if record is not None:
+                record.append((t, EVENT_NAMES[kind], payload))
+            if kind == FINISH:
+                finish(payload, t)
+            elif kind == OFFER:
+                offer(payload, t)
+            elif kind == ARRIVE:
+                arrive(payload[0], payload[1], t)
+            elif kind == POLL:
+                poll(t)
+            else:
+                control(t)
+        if not micro.pending_count:   # defensive: a timer covers every batch
+            break
+        dispatch(micro.flush(), state["horizon"])
+
+    per_stream = [RunStats([
+        FrameResult(latency_s=float(lat), violated=bool(vio),
+                    deviation=float(dev), alpha=float(alpha), split=int(spl),
+                    accuracy=float(acc), payload_bytes=float(pay),
+                    bandwidth_bps=float(bw), queue_s=float(q), logits=lg)
+        for lat, vio, dev, alpha, spl, acc, pay, bw, q, lg in rows])
+        for rows in results]
+    return FleetStats(per_stream=per_stream,
+                      cloud_busy_s=state["busy"],
+                      horizon_s=state["horizon"],
+                      capacity=capacity0,
+                      batch_sizes=batch_sizes,
+                      dropped_per_stream=dropped,
+                      capacity_timeline=cap_timeline,
+                      stream_classes=[s.sla_class for s in streams])

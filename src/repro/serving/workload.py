@@ -200,21 +200,34 @@ def arrival_times(cfg: ArrivalConfig, n_frames: int,
 @dataclasses.dataclass(frozen=True)
 class DeviceTier:
     """A named hardware class: multiplies the fitted profile's device-side
-    latencies (per-layer linear model + embed). ``jetson`` is the calibration
-    baseline (the profile is fitted against a Jetson-class edge platform)."""
+    latencies (per-layer linear model + embed), and — independently — the
+    accuracy term (``accuracy_scale``): a phone-class camera degrades what
+    the model can recognize, not just how fast the device computes. The
+    latency side flows through ``tier_profile`` into the stream's planner
+    tables; the accuracy side flows through ``StreamSpec.accuracy_scale``
+    into ``EngineConfig.accuracy_scale`` and lands in every
+    ``FrameResult.accuracy`` (so ``FleetStats.avg_accuracy`` reports the
+    fleet's capture-quality mix). ``jetson`` is the calibration baseline
+    (the profile is fitted against a Jetson-class edge platform)."""
     name: str
     compute_scale: float = 1.0
+    accuracy_scale: float = 1.0
 
     def __post_init__(self):
         if self.compute_scale <= 0:
             raise ValueError(
                 f"compute_scale must be > 0, got {self.compute_scale}")
+        if not 0.0 < self.accuracy_scale <= 1.0:
+            raise ValueError(
+                f"accuracy_scale must be in (0, 1], got {self.accuracy_scale}")
 
 
 DEVICE_TIERS = {
     "uniform": DeviceTier("uniform", 1.0),   # alias: the fleet-wide profile
     "jetson": DeviceTier("jetson", 1.0),
-    "phone": DeviceTier("phone", 4.0),
+    # phone-class optics/sensor: ~3% relative accuracy degradation on top of
+    # the 4x slower device compute
+    "phone": DeviceTier("phone", 4.0, accuracy_scale=0.97),
     "laptop": DeviceTier("laptop", 0.45),
 }
 
@@ -457,7 +470,8 @@ class WorkloadSpec:
                 max_inflight=self.arrivals.max_inflight,
                 profile=None if prof is profile else prof,
                 tier=tier.name,
-                sla_class=self.sla_classes[si % len(self.sla_classes)]))
+                sla_class=self.sla_classes[si % len(self.sla_classes)],
+                accuracy_scale=tier.accuracy_scale))
         if self.network.kind == "csv":
             pool = csv_traces(self.network.path, self.network.rtt_ms / 1e3)
             specs = [dataclasses.replace(s, trace=pool[i % len(pool)])

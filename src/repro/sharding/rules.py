@@ -26,7 +26,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.param import ParamSpec, is_spec
+from repro.models.param import is_spec
 
 # Mesh axes are ("pod", "data", "model") or ("data", "model"); "pod" folds into
 # data-parallelism whenever present.

@@ -57,7 +57,8 @@ def test_fig2_cloud_vitb_latency():
 
 def test_measured_profiler_linear_fit():
     """fit_linear on real (jitted CPU) timings still yields a usable model."""
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.models import layers as L, param as param_lib
 
     d, dff, heads = 64, 128, 4

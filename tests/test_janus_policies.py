@@ -1,10 +1,8 @@
 """Property tests (hypothesis) for the paper's policies: pruning schedules
 (Eq. 1-2), fine-to-coarse split sets (Eq. 3), scheduler optimality, bandwidth
 estimation."""
-import math
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import bandwidth, pruning, splitter, scheduler

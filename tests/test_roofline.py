@@ -1,5 +1,4 @@
 """HLO collective parser + roofline term arithmetic."""
-import numpy as np
 import pytest
 
 from repro.runtime import roofline

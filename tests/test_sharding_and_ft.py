@@ -1,7 +1,6 @@
 """Sharding rules (divisibility fallback, profiles) + fault-tolerance policies
 + serving batcher."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
