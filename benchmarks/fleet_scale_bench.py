@@ -17,11 +17,22 @@ frame** — the scale metric the ROADMAP trajectory tracks. The runtime is
 built outside the timer (profile fitting and planner-table construction are
 one-time, value-cached costs), so the number is the simulator core itself.
 
+A second sweep, ``region_frontier``, is the multi-region cost-vs-violation
+frontier: three asymmetric regional cells (capacity split 50/30/20, RTT
+offsets 0/20/60 ms, spillover routing on) under a joint capacity x SLA x
+load grid — N ∈ {4k, 16k, 64k} streams, per-(N, SLA) capacity scaled to
+{0.25, 0.5, 1.0} of the single-tier default. Each (N, SLA) runtime is built
+once and re-swept across capacity scales by swapping the region list, so
+the 64k engines/traces are constructed once. Every cell embeds its own
+``wall_budget_s``; the frontier claim (more capacity → no more violations
+within a (N, SLA) group) is gated structurally.
+
 ``BENCH_fleet_scale.json`` is gated by ``benchmarks/check_regression.py``
 against ``benchmarks/baselines/BENCH_fleet_scale.json``: per-cell
-wall-per-frame at a ratio tolerance, an absolute per-cell wall budget (the
-N=4096 cell must finish in seconds, not minutes), and exact completed-frame
-counts (the simulator is seeded and deterministic).
+wall-per-frame at a ratio tolerance, absolute per-cell wall budgets (the
+N=4096 cell must finish in seconds, not minutes; frontier cells carry their
+own budgets), and exact completed-frame counts (the simulator is seeded and
+deterministic).
 
   PYTHONPATH=src python benchmarks/fleet_scale_bench.py --out BENCH_fleet_scale.json
   PYTHONPATH=src python benchmarks/fleet_scale_bench.py --smoke   # N<=256
@@ -38,10 +49,23 @@ except ModuleNotFoundError:
     from benchmarks import common
 
 from repro.core import engine  # noqa: E402
-from repro.serving import workload  # noqa: E402
+from repro.serving import fleet, workload  # noqa: E402
 
 SCENARIOS = ("closed", "poisson")
 STREAMS = (64, 256, 1024, 4096)
+
+# region_frontier sweep: 3 asymmetric cells, capacity x SLA x load grid
+REGION_WEIGHTS = (0.5, 0.3, 0.2)
+REGION_RTTS_MS = (0.0, 20.0, 60.0)
+CAP_SCALES = (0.25, 0.5, 1.0)
+FRONTIER_CELLS = ((4096, 200.0), (4096, 300.0), (16384, 300.0),
+                  (65536, 300.0))
+FRONTIER_CELLS_SMOKE = ((256, 300.0),)
+FRONTIER_FRAMES = 8
+# absolute per-cell wall budgets (seconds), keyed by stream count — sized
+# ~5x measured local wall (0.3 / 1.6 / 4.6 / 29 s at 256/4k/16k/64k) so
+# slow CI machines pass while runaway regressions fail
+FRONTIER_BUDGETS = {256: 10.0, 4096: 10.0, 16384: 30.0, 65536: 150.0}
 
 
 def scenario_spec(name: str, n_streams: int, frames: int,
@@ -96,8 +120,76 @@ def run_sweep(streams, frames: int, sla_ms: float, seed: int) -> list[dict]:
     return rows
 
 
+def frontier_regions(n_streams: int, cap_scale: float) -> list:
+    """The three asymmetric cells at ``cap_scale`` of the single-tier
+    default capacity (one executor per max_batch-worth of streams)."""
+    total = max(3, round(fleet.default_cloud_config(n_streams).capacity
+                         * cap_scale))
+    return [fleet.RegionSpec(name=f"r{i}",
+                             capacity=max(1, round(total * w)),
+                             rtt_offset_s=REGION_RTTS_MS[i] / 1e3)
+            for i, w in enumerate(REGION_WEIGHTS)]
+
+
+def bench_region_frontier(profile, cells, seed: int) -> list[dict]:
+    """The capacity x SLA x load frontier: per (N, SLA) pair the runtime
+    (streams, traces with baked home-region RTT offsets, engines) is built
+    once outside the timers and re-swept across capacity scales by swapping
+    the region list."""
+    wifi = workload.NetworkConfig(network="wifi", mobility="static")
+    rows = []
+    for n, sla_ms in cells:
+        spec = workload.WorkloadSpec(
+            n_streams=n, n_frames=FRONTIER_FRAMES, seed=seed, network=wifi,
+            sla_ms=sla_ms,
+            regions=tuple(
+                workload.RegionConfig(f"r{i}", capacity=1,
+                                      rtt_ms=REGION_RTTS_MS[i])
+                for i in range(len(REGION_WEIGHTS))))
+        cfg = engine.EngineConfig(sla_s=sla_ms / 1e3,
+                                  include_scheduler_overhead=False)
+        rt = workload.build_runtime(spec, profile, cfg)
+        for scale in CAP_SCALES:
+            rt.regions = frontier_regions(n, scale)
+            t0 = time.perf_counter()
+            fs = rt.run()
+            wall_s = time.perf_counter() - t0
+            completed = len(fs.all_frames)
+            row = {
+                "streams": n,
+                "sla_ms": sla_ms,
+                "cap_scale": scale,
+                "frames_per_stream": FRONTIER_FRAMES,
+                "capacity": fs.capacity,
+                "completed_frames": completed,
+                "violation_ratio": fs.violation_ratio,
+                "p99_latency_ms": fs.p99_latency_s * 1e3,
+                "spill_ratio": fs.spill_ratio,
+                "capacity_seconds": fs.capacity_seconds,
+                "per_region": [
+                    {"name": r.name, "capacity": r.capacity,
+                     "utilization": r.utilization,
+                     "spill_ratio": r.spill_ratio,
+                     "capacity_seconds": r.capacity_seconds}
+                    for r in fs.per_region],
+                "wall_s": wall_s,
+                "wall_budget_s": FRONTIER_BUDGETS[n],
+                "wall_per_frame_us":
+                    wall_s / completed * 1e6 if completed else 0.0,
+            }
+            rows.append(row)
+            print(f"frontier N={n:5d} sla={sla_ms:5.0f}ms "
+                  f"cap={fs.capacity:5d} (x{scale:.2f}) "
+                  f"viol={row['violation_ratio']:.3f} "
+                  f"spill={row['spill_ratio']:.3f} "
+                  f"cap_s={row['capacity_seconds']:9.1f} "
+                  f"wall={wall_s:6.2f}s")
+    return rows
+
+
 def rows():
-    """``benchmarks/run.py`` hook: one CSV row per scenario at N=256."""
+    """``benchmarks/run.py`` hook: one CSV row per scenario at N=256, plus
+    the smoke-size region-frontier cells."""
     profile = common.paper_profile()
     out = []
     for scenario in SCENARIOS:
@@ -106,6 +198,12 @@ def rows():
                     r["wall_per_frame_us"],
                     f"frames={r['completed_frames']} "
                     f"drop={r['drop_ratio']:.2f} wall={r['wall_s']:.2f}s"))
+    for r in bench_region_frontier(profile, FRONTIER_CELLS_SMOKE, seed=7):
+        out.append((f"fleet_scale/frontier-n{r['streams']}"
+                    f"-x{r['cap_scale']:.2f}",
+                    r["wall_per_frame_us"],
+                    f"viol={r['violation_ratio']:.3f} "
+                    f"spill={r['spill_ratio']:.3f} wall={r['wall_s']:.2f}s"))
     return out
 
 
@@ -124,12 +222,16 @@ def main(argv=None):
     streams = [n for n in args.streams if n <= 256] if args.smoke \
         else args.streams
     bench_rows = run_sweep(streams, args.frames, args.sla_ms, args.seed)
+    profile = common.paper_profile()
+    frontier_cells = FRONTIER_CELLS_SMOKE if args.smoke else FRONTIER_CELLS
+    frontier_rows = bench_region_frontier(profile, frontier_cells, args.seed)
     artifact = {
         "benchmark": "fleet_scale_bench",
         "config": {"streams": streams, "frames": args.frames,
                    "sla_ms": args.sla_ms, "seed": args.seed,
                    "smoke": args.smoke},
         "rows": bench_rows,
+        "region_frontier": frontier_rows,
     }
     with open(args.out, "w") as f:
         json.dump(artifact, f, indent=2)

@@ -1,6 +1,6 @@
 """Workload-scenario tour: the declarative layer over the fleet runtime.
 
-Six scenarios on the paper's ViT-L@384 timing profile:
+Scenarios on the paper's ViT-L@384 timing profile:
 
   1. closed loop (the classic fleet — regression anchor),
   2. open-loop Poisson overload with admission control (drops, not queues),
@@ -10,11 +10,15 @@ Six scenarios on the paper's ViT-L@384 timing profile:
      deadline-aware micro-batching and per-class stats,
   6. diurnal (day-cycle) arrivals with *predictive* (EWMA-forecast)
      autoscaling,
+  7. a priority + predictive scenario loaded from a JSON ``WorkloadSpec``
+     via the serving CLI's ``--workload`` flag,
+  8. city-scale multi-region cloud: three regional cells at different
+     distances (RTT offsets), streams homed round-robin, bursty load
+     spilling over between cells past the queue-delay slack.
 
-then a priority + predictive scenario loaded from a JSON ``WorkloadSpec``
-via the serving CLI's ``--workload`` flag. The full JSON schema — including
-``sla_class`` assignment, custom ``sla_class_defs``, and diurnal /
-rate-trace arrival schedules — is documented in ``docs/workload_spec.md``.
+The full JSON schema — including ``sla_class`` assignment, custom
+``sla_class_defs``, ``regions``, and diurnal / rate-trace arrival schedules
+— is documented in ``docs/workload_spec.md``.
 
     PYTHONPATH=src python examples/workload_scenarios.py
 """
@@ -80,3 +84,12 @@ with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
     json.dump(spec, f)
 serve.main(["--workload", f.name])
 pathlib.Path(f.name).unlink()
+
+print("\n=== 8. city-scale multi-region cloud (affinity + spillover) ===")
+# three cells: a near metro cell, a mid-distance cell, and a far fallback;
+# bursty load on tight per-cell capacity makes frames spill between cells
+serve.main(["--streams", "24", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "mmpp", "--rate-fps", "5", "--burst-rate-fps", "80",
+            "--max-inflight", "4", "--capacity", "3", "--max-batch", "4",
+            "--regions", "3", "--region-rtt-ms", "0,15,40",
+            "--spill-slack-ms", "10", *BASE])

@@ -37,7 +37,11 @@ per-class stats in the report), ``--trace-csv FILE_OR_DIR`` (real-trace
 replay instead of synthetic Markov traces), and ``--autoscale`` (+
 ``--autoscale-min/max``, ``--autoscale-policy utilization|predictive``:
 reactive or forecast-driven cloud capacity scaling, reported as a capacity
-timeline / capacity-seconds).
+timeline / capacity-seconds). ``--regions R`` + ``--region-rtt-ms 0,20,60``
+split the cloud into R regional cells (streams homed round-robin, each
+paying its home cell's extra RTT; frames spill to another cell past
+``--spill-slack-ms`` of queue delay), with a per-region block — utilization,
+spillover ratio, capacity-seconds — in the fleet report.
 
 Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
@@ -99,13 +103,22 @@ def spec_from_args(args) -> workload_lib.WorkloadSpec:
         autoscale = fleet_lib.AutoscaleConfig(min_capacity=args.autoscale_min,
                                               max_capacity=args.autoscale_max,
                                               policy=args.autoscale_policy)
+    regions = ()
+    if args.regions > 1 or args.region_rtt_ms:
+        rtts = [float(v) for v in args.region_rtt_ms.split(",")] \
+            if args.region_rtt_ms else []
+        n = max(args.regions, len(rtts), 1)
+        rtts += [0.0] * (n - len(rtts))
+        regions = tuple(workload_lib.RegionConfig(name=f"r{i}", rtt_ms=rtts[i])
+                        for i in range(n))
     return workload_lib.WorkloadSpec(
         n_streams=args.streams, n_frames=args.frames, policy=args.policy,
         sla_ms=args.sla_ms, seed=args.seed, arrivals=arrivals,
         tiers=tuple(args.tiers), sla_classes=tuple(args.sla_classes),
         network=network,
         capacity=args.capacity or None, max_batch=args.max_batch or None,
-        max_wait_ms=args.batch_wait_ms, autoscale=autoscale)
+        max_wait_ms=args.batch_wait_ms, autoscale=autoscale,
+        regions=regions, spill_slack_ms=args.spill_slack_ms)
 
 
 def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
@@ -161,6 +174,17 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
               f"final={fs.final_capacity} "
               f"capacity_seconds={fs.capacity_seconds:.2f} "
               f"changes={len(fs.capacity_timeline) - 1}")
+    if len(fs.per_region) > 1:
+        print(f"[fleet regions] cells={len(fs.per_region)} "
+              f"spill%={100*fs.spill_ratio:.1f} "
+              f"spill_slack={rt.spill_slack_s*1e3:.0f}ms")
+        for rs in fs.per_region:
+            print(f"  {rs.name:10s} cap={rs.capacity:4d} "
+                  f"rtt+={rs.rtt_offset_s*1e3:5.1f}ms "
+                  f"util={100*rs.utilization:5.1f}% "
+                  f"offered={rs.offered:6d} served={rs.served:6d} "
+                  f"spill%={100*rs.spill_ratio:5.1f} "
+                  f"cap_s={rs.capacity_seconds:8.2f}")
     return fs
 
 
@@ -230,6 +254,17 @@ def main(argv=None):
                     choices=list(fleet_lib.AUTOSCALE_POLICIES),
                     help="reactive windowed utilization (default) or "
                          "predictive EWMA arrival-rate forecasting")
+    ap.add_argument("--regions", type=int, default=1,
+                    help="regional cloud cells (streams homed round-robin; "
+                         "capacity split evenly unless --workload sets it; "
+                         "1 = the classic single shared tier)")
+    ap.add_argument("--region-rtt-ms", default="",
+                    help="comma-separated extra RTT per region, e.g. "
+                         "'0,20,60' (missing entries default to 0; implies "
+                         "--regions len(list))")
+    ap.add_argument("--spill-slack-ms", type=float, default=25.0,
+                    help="home-region queue delay past which a frame spills "
+                         "to the cheapest other region")
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
@@ -245,6 +280,7 @@ def main(argv=None):
             ("--sla-classes", args.sla_classes != ["standard"]),
             ("--trace-csv", bool(args.trace_csv)),
             ("--autoscale", args.autoscale),
+            ("--regions", args.regions > 1 or bool(args.region_rtt_ms)),
         ] if used]
         if fleet_only:
             ap.error(f"{' '.join(fleet_only)} only work in fleet mode "

@@ -6,11 +6,12 @@ from repro.serving.batcher import (ContinuousBatcher, KVSlotManager,
                                    Request)
 from repro.serving.fleet import (AutoscaleConfig, Autoscaler, ClassStats,
                                  CloudTierConfig, FleetRuntime, FleetStats,
-                                 StreamSpec, default_cloud_config)
+                                 RegionSpec, RegionStats, StreamSpec,
+                                 default_cloud_config)
 from repro.serving.sla import (DEFAULT_SLA_CLASSES, SlaClass,
                                resolve_sla_class)
 from repro.serving.workload import (ArrivalConfig, DeviceTier, DEVICE_TIERS,
-                                    NetworkConfig, WorkloadSpec,
+                                    NetworkConfig, RegionConfig, WorkloadSpec,
                                     arrival_times, build_runtime,
                                     stream_seeds, tier_profile)
 
@@ -18,9 +19,10 @@ __all__ = [
     "ContinuousBatcher", "KVSlotManager", "MicroBatcher",
     "PriorityMicroBatcher", "Request",
     "AutoscaleConfig", "Autoscaler", "ClassStats", "CloudTierConfig",
-    "FleetRuntime", "FleetStats", "StreamSpec", "default_cloud_config",
+    "FleetRuntime", "FleetStats", "RegionSpec", "RegionStats", "StreamSpec",
+    "default_cloud_config",
     "DEFAULT_SLA_CLASSES", "SlaClass", "resolve_sla_class",
     "ArrivalConfig", "DeviceTier", "DEVICE_TIERS", "NetworkConfig",
-    "WorkloadSpec", "arrival_times", "build_runtime", "stream_seeds",
-    "tier_profile",
+    "RegionConfig", "WorkloadSpec", "arrival_times", "build_runtime",
+    "stream_seeds", "tier_profile",
 ]

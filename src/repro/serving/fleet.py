@@ -74,6 +74,18 @@ Workload hooks (driven declaratively by ``repro.serving.workload``):
     windowed utilization or predictively from an EWMA arrival-rate forecast
     (``AutoscaleConfig.policy="predictive"``); the capacity timeline and
     capacity-seconds cost land in ``FleetStats``.
+  * **cloud regions** — the "shared cloud tier" generalizes to R regional
+    *cells* (``RegionSpec``): each region owns its own executor pool,
+    micro-batcher, and (optional) autoscaler, plus an RTT offset on top of
+    the stream's network trace (a stream homed on a far region pays that
+    region's distance). Streams carry a home-region affinity
+    (``StreamSpec.region``); when the home region's executor queue exceeds
+    ``spill_slack_s``, the frame *spills over* to the cheapest other region
+    — estimated queue delay plus the extra round-trip RTT
+    (``max(0, offset_r - offset_home)``) — and pays that extra RTT before
+    entering the remote batcher. ``FleetStats.per_region`` reports each
+    cell's utilization, spillover ratio, and capacity-seconds. A one-region
+    fleet (the default) reproduces the classic shared tier bit for bit.
   * **SLA classes** — each stream names an ``SlaClass``
     (``repro.serving.sla``): the class scales the stream's SLA budget, and a
     fleet with more than one class (or ``priority=True``) swaps the FIFO
@@ -125,6 +137,10 @@ class StreamSpec:
     accuracy_scale: float = 1.0  # capture-quality multiplier on the accuracy
     # term (set from the device tier: a phone-class camera degrades accuracy,
     # not just latency); 1.0 reproduces the unscaled model bit-exact
+    region: int = 0              # home cloud region (index into the fleet's
+    # RegionSpec list; 0 — the only region — for classic single-cell fleets).
+    # The home region's RTT offset is baked into the stream's trace by the
+    # workload layer, so planning accounts it in the engine's float order.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,14 +167,40 @@ class CloudTierConfig:
 
 def default_cloud_config(n_streams: int) -> CloudTierConfig:
     """Sensible shared-tier defaults for N streams: one batch executor per
-    ``max_batch``-worth of streams (capacity scales with fleet size instead of
-    staying pinned at the dataclass default). With one stream the batcher is
-    transparent (``max_batch=1`` flushes every offer immediately) and capacity
-    is irrelevant, which is what makes the N=1 fleet bit-identical to the
-    single-stream engine."""
+    ``max_batch``-worth of streams. Capacity scales with fleet size all the
+    way up — the old hard 32-executor cap made every closed-loop fleet past
+    ~256 streams pin near-total SLA violation (the simulator outran the
+    scenario model); city-scale fleets now split this pool across regional
+    cells instead (``RegionSpec`` / ``workload.RegionConfig``). With one
+    stream the batcher is transparent (``max_batch=1`` flushes every offer
+    immediately) and capacity is irrelevant, which is what makes the N=1
+    fleet bit-identical to the single-stream engine."""
     max_batch = max(1, min(8, n_streams))
-    capacity = max(1, min(32, -(-n_streams // max_batch)))
+    capacity = max(1, -(-n_streams // max_batch))
     return CloudTierConfig(capacity=capacity, max_batch=max_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One regional cloud cell: a resolved executor pool the fleet runtime
+    can instantiate directly (the JSON-facing layer with defaults lives in
+    ``workload.RegionConfig``). ``rtt_offset_s`` is the extra round-trip to
+    this region on top of a stream's trace RTT — the workload layer bakes
+    the *home* region's offset into each stream's trace, so here it only
+    prices spillover routing (``max(0, offset_target - offset_home)``) and
+    labels the report."""
+    name: str = "cloud"
+    capacity: int = 4
+    rtt_offset_s: float = 0.0
+    autoscale: AutoscaleConfig | None = None
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(
+                f"region capacity must be >= 1, got {self.capacity}")
+        if self.rtt_offset_s < 0:
+            raise ValueError(
+                f"rtt_offset_s must be >= 0, got {self.rtt_offset_s}")
 
 
 AUTOSCALE_POLICIES = ("utilization", "predictive")
@@ -322,6 +364,48 @@ class ClassStats:
 
 
 @dataclasses.dataclass
+class RegionStats:
+    """One regional cell's slice of a fleet run: its capacity cost, load,
+    and how much of its home traffic spilled elsewhere."""
+    name: str
+    rtt_offset_s: float
+    capacity: int                # configured (initial) executor count
+    busy_s: float
+    horizon_s: float
+    # this region's executor-count step function [(t, capacity), ...]
+    capacity_timeline: list[tuple[float, int]] = \
+        dataclasses.field(default_factory=list)
+    offered: int = 0             # cloud-bound frames homed on this region
+    spilled_out: int = 0         # of those, routed to another region
+    served: int = 0              # frames this region's executors ran
+    batches: int = 0             # micro-batches this region dispatched
+
+    @property
+    def capacity_seconds(self) -> float:
+        if self.horizon_s <= 0:
+            return 0.0
+        tl = self.capacity_timeline or [(0.0, self.capacity)]
+        total = 0.0
+        for (t0, c), (t1, _) in zip(tl, tl[1:] + [(self.horizon_s, 0)]):
+            t1 = min(t1, self.horizon_s)
+            if t1 > t0:
+                total += c * (t1 - t0)
+        return total
+
+    @property
+    def utilization(self) -> float:
+        cap_s = self.capacity_seconds
+        if cap_s <= 0:
+            return 0.0
+        return min(1.0, self.busy_s / cap_s)
+
+    @property
+    def spill_ratio(self) -> float:
+        """Home-region frames routed elsewhere / home-region cloud offers."""
+        return self.spilled_out / self.offered if self.offered else 0.0
+
+
+@dataclasses.dataclass
 class FleetStats:
     per_stream: list[RunStats]
     cloud_busy_s: float
@@ -330,11 +414,16 @@ class FleetStats:
     batch_sizes: list[int]
     dropped_per_stream: list[int] = dataclasses.field(default_factory=list)
     # executor-count step function [(t, capacity), ...]; static runs hold the
-    # single entry (0, capacity)
+    # single entry (0, capacity). Multi-region runs merge the per-region
+    # timelines into a fleet-total step function here.
     capacity_timeline: list[tuple[float, int]] = \
         dataclasses.field(default_factory=list)
     # SLA class of stream i (parallel to per_stream; empty = all default)
     stream_classes: list[str] = dataclasses.field(default_factory=list)
+    # one entry per regional cell, in RegionSpec order (single-cell runs get
+    # one "cloud" entry); home region of stream i parallels per_stream
+    per_region: list[RegionStats] = dataclasses.field(default_factory=list)
+    stream_regions: list[int] = dataclasses.field(default_factory=list)
 
     @functools.cached_property
     def aggregate(self) -> RunStats:
@@ -449,6 +538,17 @@ class FleetStats:
     def aggregate_fps(self) -> float:
         return len(self.all_frames) / self.horizon_s if self.horizon_s > 0 else 0.0
 
+    @property
+    def total_spilled(self) -> int:
+        return sum(r.spilled_out for r in self.per_region)
+
+    @property
+    def spill_ratio(self) -> float:
+        """Fleet-wide spillover: cloud-bound frames served away from their
+        home region / all cloud-bound frames. 0.0 for single-region fleets."""
+        offered = sum(r.offered for r in self.per_region)
+        return self.total_spilled / offered if offered else 0.0
+
 
 @dataclasses.dataclass
 class _CloudItem:
@@ -469,12 +569,37 @@ class FleetRuntime:
                  model_cfg=None, params=None,
                  autoscaler: Autoscaler | AutoscaleConfig | None = None,
                  sla_classes: dict[str, sla_lib.SlaClass] | None = None,
-                 priority: bool | None = None):
+                 priority: bool | None = None,
+                 regions: list[RegionSpec] | None = None,
+                 spill_slack_s: float = 0.025):
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
         if isinstance(autoscaler, AutoscaleConfig):
             autoscaler = Autoscaler(autoscaler)
         self.autoscaler = autoscaler
+        if spill_slack_s < 0:
+            raise ValueError(f"spill_slack_s must be >= 0, got {spill_slack_s}")
+        self.spill_slack_s = spill_slack_s
+        if regions:
+            if len(regions) == 1:
+                # fold an explicit single region back into the classic shared
+                # tier so every code path (run / run_reference / reports)
+                # agrees on capacity and autoscale policy
+                r0 = regions[0]
+                self.cloud = dataclasses.replace(self.cloud,
+                                                 capacity=r0.capacity)
+                if r0.autoscale is not None:
+                    self.autoscaler = Autoscaler(r0.autoscale)
+            self.regions = list(regions)
+        else:
+            self.regions = [RegionSpec(
+                name="cloud", capacity=self.cloud.capacity,
+                autoscale=self.autoscaler.cfg if self.autoscaler else None)]
+        for s in streams:
+            if not 0 <= s.region < len(self.regions):
+                raise ValueError(
+                    f"stream region {s.region} out of range for "
+                    f"{len(self.regions)} region(s)")
         self.sla_classes = dict(sla_classes) if sla_classes is not None \
             else dict(sla_lib.DEFAULT_SLA_CLASSES)
         # priority admission: explicit, or auto (on iff any stream deviates
@@ -525,6 +650,11 @@ class FleetRuntime:
         oracle: ``tests/test_simcore.py`` asserts ``run()`` reproduces this
         loop's ``FleetStats`` bit for bit on the seed scenarios. One
         ``plan_frame`` Python call per frame — do not use at scale."""
+        if len(self.regions) > 1:
+            raise ValueError(
+                "run_reference models the classic single shared tier; "
+                f"multi-region fleets ({len(self.regions)} regions) run on "
+                "the event-heap core (run())")
         streams, cloud = self.streams, self.cloud
         estimators = [HarmonicMeanEstimator(cold_start_bps=float(np.mean(s.trace.bps)))
                       for s in streams]
@@ -729,6 +859,13 @@ class FleetRuntime:
                 break
             dispatch(micro.flush(), state["horizon"])
 
+        r0 = self.regions[0]
+        region_stats = RegionStats(
+            name=r0.name, rtt_offset_s=r0.rtt_offset_s, capacity=capacity0,
+            busy_s=state["busy"], horizon_s=state["horizon"],
+            capacity_timeline=list(cap_timeline),
+            offered=sum(batch_sizes), spilled_out=0,
+            served=sum(batch_sizes), batches=len(batch_sizes))
         return FleetStats(per_stream=[RunStats(fr) for fr in results],
                           cloud_busy_s=state["busy"],
                           horizon_s=state["horizon"],
@@ -736,4 +873,6 @@ class FleetRuntime:
                           batch_sizes=batch_sizes,
                           dropped_per_stream=dropped,
                           capacity_timeline=cap_timeline,
-                          stream_classes=[s.sla_class for s in streams])
+                          stream_classes=[s.sla_class for s in streams],
+                          per_region=[region_stats],
+                          stream_regions=[s.region for s in streams])

@@ -54,6 +54,19 @@ legacy-planner comparison benches keep their exact semantics. The fallback
 is per stream: a stream whose arrival times are not sorted (so its frames
 do not arrive in index order) drops back to an engine-planned stream inside
 the same simulation.
+
+**Regional cells.** The cloud tier generalizes to R regions
+(``fleet.RegionSpec``): per-region micro-batchers, executor heaps,
+autoscalers, and poll/control events all hang off the single event heap
+(payloads carry the region index). Planner-batching groups key on
+``(region, tables, rtt, sla, policy)`` — the home region's RTT offset is
+already baked into each stream's trace by the workload layer, so the
+``AcctTables`` evals account it in the engine's exact float order. At OFFER
+time a frame whose home-region queue delay exceeds ``rt.spill_slack_s``
+routes to the region minimizing ``queue_delay + max(0, Δrtt_offset)``,
+paying the positive Δ as an ENQUEUE delay before the remote batcher (it
+lands in the frame's ``queue_s``). With one region every branch degenerates
+to the classic shared tier — same events, same floats, bit for bit.
 """
 from __future__ import annotations
 
@@ -68,9 +81,11 @@ from repro.core.engine import FrameResult, RunStats, run_cloud_batch
 from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
 
 # event kinds (heap entries are (time, seq, kind, payload) tuples; seq is the
-# global tie-break, assigned in push order exactly like the retired loop's)
-ARRIVE, OFFER, POLL, FINISH, CONTROL = 0, 1, 2, 3, 4
-EVENT_NAMES = ("arrive", "offer", "poll", "finish", "control")
+# global tie-break, assigned in push order exactly like the retired loop's).
+# ENQUEUE is spillover's deferred batcher entry: a frame routed to a non-home
+# region pays the extra round-trip RTT before joining that region's batch.
+ARRIVE, OFFER, POLL, FINISH, CONTROL, ENQUEUE = 0, 1, 2, 3, 4, 5
+EVENT_NAMES = ("arrive", "offer", "poll", "finish", "control", "enqueue")
 
 _WINDOW = 5          # HarmonicMeanEstimator's observation window
 _CHUNK_MIN, _CHUNK_MAX = 4, 64   # post-drop refill sizing (adaptive)
@@ -409,12 +424,13 @@ def _build_pipes(rt) -> list:
             continue   # empty arrival list: the stream never plans a frame
         if np.all(obs_arr > 0):
             groups.setdefault(
-                (id(tables), rtt, sla, spec.policy, frames), []).append(pipe)
+                (spec.region, id(tables), rtt, sla, spec.policy, frames),
+                []).append(pipe)
         # else: non-positive trace values are skipped by the estimator —
         # leave the pipe empty so take() routes through the exact scalar
         # refill path
 
-    for (_, rtt, sla, policy, frames), members in groups.items():
+    for (_, _, rtt, sla, policy, frames), members in groups.items():
         t0 = time.perf_counter()
         obs2d = np.asarray([p.obs for p in members])
         est2d = window_estimates(obs2d, np.asarray([p.cold for p in members]))
@@ -442,12 +458,32 @@ def _build_pipes(rt) -> list:
 # ---------------------------------------------------------------------------
 
 
+def _merge_timelines(tls: list[list[tuple[float, int]]]) \
+        -> list[tuple[float, int]]:
+    """Merge per-region executor-count step functions into one fleet-total
+    step function. A single region passes through untouched (the classic
+    timeline, bit for bit)."""
+    if len(tls) == 1:
+        return list(tls[0])
+    times = sorted({t for tl in tls for t, _ in tl})
+    idx = [0] * len(tls)
+    merged: list[tuple[float, int]] = []
+    for t in times:
+        for k, tl in enumerate(tls):
+            while idx[k] + 1 < len(tl) and tl[idx[k] + 1][0] <= t:
+                idx[k] += 1
+        total = sum(tl[idx[k]][1] for k, tl in enumerate(tls))
+        if not merged or merged[-1][1] != total:
+            merged.append((t, total))
+    return merged
+
+
 def simulate(rt, images=None, record: list | None = None):
     """Run ``rt`` (a ``fleet.FleetRuntime``) through the event-heap core and
     return its ``FleetStats``. ``record``, if given, collects every popped
     event as ``(time, kind, payload)`` — the determinism test asserts two
     seeded runs produce identical event sequences."""
-    from repro.serving.fleet import Autoscaler, FleetStats
+    from repro.serving.fleet import Autoscaler, FleetStats, RegionStats
 
     streams, cloud = rt.streams, rt.cloud
     n_streams = len(streams)
@@ -476,25 +512,46 @@ def simulate(rt, images=None, record: list | None = None):
     exec_plans: list = []
     batch_sizes: list[int] = []
 
-    if rt.priority:
-        micro = PriorityMicroBatcher(cloud.max_batch, cloud.max_wait_s,
-                                     classes=rt.sla_classes)
-    else:
-        micro = MicroBatcher(cloud.max_batch, cloud.max_wait_s)
-    executors: list[float] = []      # busy-until heap, capped at capacity
+    # -- per-region cloud state (R == 1 is the classic shared tier) ----------
+    n_regions = len(rt.regions)
+    home_of = [s.region for s in streams]
+    off = [reg.rtt_offset_s for reg in rt.regions]
+
+    def _make_micro():
+        if rt.priority:
+            return PriorityMicroBatcher(cloud.max_batch, cloud.max_wait_s,
+                                        classes=rt.sla_classes)
+        return MicroBatcher(cloud.max_batch, cloud.max_wait_s)
+
+    micros = [_make_micro() for _ in rt.regions]
+    executors: list[list[float]] = [[] for _ in rt.regions]
+    # busy-until heaps, each capped at its region's capacity
+    scalers: list = []
+    caps0: list[int] = []
+    for reg in rt.regions:
+        cfg = reg.autoscale or (rt.autoscaler.cfg if rt.autoscaler else None)
+        sc = Autoscaler(cfg) if cfg is not None else None
+        scalers.append(sc)
+        caps0.append(sc.initial_capacity(reg.capacity) if sc
+                     else reg.capacity)
+    caps = list(caps0)
+    busy = [0.0] * n_regions
+    cloud_arrivals = [0] * n_regions
+    offered = [0] * n_regions        # cloud-bound frames homed per region
+    spilled = [0] * n_regions        # of those, routed to another region
+    served = [0] * n_regions         # frames each region's executors ran
+    region_batches = [0] * n_regions
+    service_intervals: list[list[tuple[float, float]]] = \
+        [[] for _ in rt.regions]
+    cap_timelines: list[list[tuple[float, int]]] = \
+        [[(0.0, c)] for c in caps0]
     seq = itertools.count()
     events: list = []                # (time, seq, kind, payload)
-    scaler = Autoscaler(rt.autoscaler.cfg) if rt.autoscaler else None
-    capacity0 = scaler.initial_capacity(cloud.capacity) if scaler \
-        else cloud.capacity
-    service_intervals: list[tuple[float, float]] = []
-    state = {"busy": 0.0, "horizon": 0.0, "capacity": capacity0,
-             "cloud_arrivals": 0,
+    state = {"horizon": 0.0,
              "remaining": sum(
                  s.n_frames if s.arrival_times is None
                  else min(s.n_frames, len(s.arrival_times))
                  for s in streams)}
-    cap_timeline: list[tuple[float, int]] = [(0.0, capacity0)]
 
     def push(t: float, kind: int, payload) -> None:
         heapq.heappush(events, (t, next(seq), kind, payload))
@@ -541,47 +598,85 @@ def simulate(rt, images=None, record: list | None = None):
         else:
             push(local_done, OFFER, rid)
 
+    def queue_delay(r: int, now: float) -> float:
+        """Routing estimate: how long a batch dispatched to region ``r`` now
+        would wait for an executor. Read-only on the busy-until heap (the
+        lazy slot retirement stays in dispatch)."""
+        ex = executors[r]
+        if len(ex) < caps[r] or ex[0] <= now:
+            return 0.0
+        return ex[0] - now
+
     def offer(rid: int, now: float) -> None:
-        state["cloud_arrivals"] += 1
+        rec = recs[rid]
+        home = home_of[rec[0]]
+        offered[home] += 1
+        if n_regions > 1 and queue_delay(home, now) > rt.spill_slack_s:
+            # spillover: cheapest cell by estimated wait + extra distance;
+            # ties keep the frame home (strict < below)
+            best, best_cost = home, queue_delay(home, now)
+            for r in range(n_regions):
+                if r == home:
+                    continue
+                cost = queue_delay(r, now) + max(0.0, off[r] - off[home])
+                if cost < best_cost:
+                    best, best_cost = r, cost
+            if best != home:
+                spilled[home] += 1
+                delta = max(0.0, off[best] - off[home])
+                if delta > 0.0:
+                    # the detour's extra round-trip precedes batcher entry
+                    push(now + delta, ENQUEUE, (rid, best))
+                    return
+                enqueue(rid, best, now)
+                return
+        enqueue(rid, home, now)
+
+    def enqueue(rid: int, r: int, now: float) -> None:
+        cloud_arrivals[r] += 1
         rec = recs[rid]
         si = rec[0]
+        micro = micros[r]
         req = Request(rid, arrival_s=now, sla_class=streams[si].sla_class,
                       deadline_s=rec[2] + sla_eff[si])
         batch = micro.offer(req, now)
         if batch is not None:
-            dispatch(batch, now)
+            dispatch(r, batch, now)
         elif rt.priority:
             # class windows can pull the flush earlier on every offer
-            push(max(micro.deadline(), now), POLL, 0)
+            push(max(micro.deadline(), now), POLL, r)
         elif micro.pending_count == 1:
             # FIFO: one expiry timer per batch (deadline never moves)
-            push(micro.deadline(), POLL, 0)
+            push(micro.deadline(), POLL, r)
 
-    def poll(now: float) -> None:
-        batch = micro.poll(now)
+    def poll(r: int, now: float) -> None:
+        batch = micros[r].poll(now)
         if batch is not None:
-            dispatch(batch, now)
+            dispatch(r, batch, now)
 
-    def dispatch(batch: list[Request], now: float) -> None:
-        members = [r.rid for r in batch]
+    def dispatch(r: int, batch: list[Request], now: float) -> None:
+        members = [req.rid for req in batch]
         if rt._execute and engine_mode:
             run_cloud_batch(rt.plan_cache, rt.model_cfg, rt.params,
                             [exec_plans[rid] for rid in members])
         service = max(recs[rid][5] for rid in members) \
             * (1.0 + cloud.batch_growth * (len(batch) - 1))
-        while len(executors) > state["capacity"] and executors[0] <= now:
-            heapq.heappop(executors)
-        if len(executors) < state["capacity"]:
+        ex, scaler = executors[r], scalers[r]
+        while len(ex) > caps[r] and ex[0] <= now:
+            heapq.heappop(ex)
+        if len(ex) < caps[r]:
             start = now
         else:
-            start = max(now, heapq.heappop(executors))
-        heapq.heappush(executors, start + service)
-        state["busy"] += service
+            start = max(now, heapq.heappop(ex))
+        heapq.heappush(ex, start + service)
+        busy[r] += service
         if scaler is not None:
             if scaler.cfg.policy != "predictive":
-                service_intervals.append((start, start + service))
+                service_intervals[r].append((start, start + service))
             scaler.observe_service(service / len(batch))
         batch_sizes.append(len(batch))
+        region_batches[r] += 1
+        served[r] += len(batch)
         done = start + service
         for rid in members:
             push(done, FINISH, rid)
@@ -608,34 +703,37 @@ def simulate(rt, images=None, record: list | None = None):
         if spec.arrival_times is None and fi + 1 < spec.n_frames:
             arrive(si, fi + 1, max(tf, t0 + spec.period_s))
 
-    def set_capacity(newc: int, now: float) -> None:
-        if newc == state["capacity"]:
+    def set_capacity(r: int, newc: int, now: float) -> None:
+        if newc == caps[r]:
             return
-        while len(executors) > newc and executors[0] <= now:
-            heapq.heappop(executors)
-        state["capacity"] = newc
-        cap_timeline.append((now, newc))
+        ex = executors[r]
+        while len(ex) > newc and ex[0] <= now:
+            heapq.heappop(ex)
+        caps[r] = newc
+        cap_timelines[r].append((now, newc))
 
-    def control(now: float) -> None:
+    def control(r: int, now: float) -> None:
+        scaler = scalers[r]
         window = scaler.cfg.interval_s
         if scaler.cfg.policy == "predictive":
-            scaler.observe_rate(state["cloud_arrivals"], window)
-            state["cloud_arrivals"] = 0
-            backlog = sum(max(0.0, e - now) for e in executors)
-            backlog += micro.pending_count * (scaler.ewma_service_s or 0.0)
-            newc = scaler.decide_predictive(now, backlog, state["capacity"])
+            scaler.observe_rate(cloud_arrivals[r], window)
+            cloud_arrivals[r] = 0
+            backlog = sum(max(0.0, e - now) for e in executors[r])
+            backlog += micros[r].pending_count \
+                * (scaler.ewma_service_s or 0.0)
+            newc = scaler.decide_predictive(now, backlog, caps[r])
         else:
-            w0, busy, keep = now - window, 0.0, []
-            for s, e in service_intervals:
-                busy += max(0.0, min(e, now) - max(s, w0))
+            w0, busy_w, keep = now - window, 0.0, []
+            for s, e in service_intervals[r]:
+                busy_w += max(0.0, min(e, now) - max(s, w0))
                 if e > now:
                     keep.append((s, e))
-            service_intervals[:] = keep
-            util = busy / (state["capacity"] * window)
-            newc = scaler.decide(now, util, state["capacity"])
-        set_capacity(newc, now)
+            service_intervals[r][:] = keep
+            util = busy_w / (caps[r] * window)
+            newc = scaler.decide(now, util, caps[r])
+        set_capacity(r, newc, now)
         if state["remaining"] > 0:
-            push(now + window, CONTROL, 0)
+            push(now + window, CONTROL, r)
 
     for si, spec in enumerate(streams):
         if spec.arrival_times is None:
@@ -643,8 +741,9 @@ def simulate(rt, images=None, record: list | None = None):
         else:
             for fi, ta in enumerate(spec.arrival_times[:spec.n_frames]):
                 push(float(ta), ARRIVE, (si, fi))
-    if scaler is not None:
-        push(scaler.cfg.interval_s, CONTROL, 0)
+    for r, scaler in enumerate(scalers):
+        if scaler is not None:
+            push(scaler.cfg.interval_s, CONTROL, r)
 
     while True:
         while events:
@@ -658,12 +757,16 @@ def simulate(rt, images=None, record: list | None = None):
             elif kind == ARRIVE:
                 arrive(payload[0], payload[1], t)
             elif kind == POLL:
-                poll(t)
+                poll(payload, t)
+            elif kind == ENQUEUE:
+                enqueue(payload[0], payload[1], t)
             else:
-                control(t)
-        if not micro.pending_count:   # defensive: a timer covers every batch
+                control(payload, t)
+        pending = [r for r in range(n_regions) if micros[r].pending_count]
+        if not pending:               # defensive: a timer covers every batch
             break
-        dispatch(micro.flush(), state["horizon"])
+        for r in pending:
+            dispatch(r, micros[r].flush(), state["horizon"])
 
     per_stream = [RunStats([
         FrameResult(latency_s=float(lat), violated=bool(vio),
@@ -672,11 +775,21 @@ def simulate(rt, images=None, record: list | None = None):
                     bandwidth_bps=float(bw), queue_s=float(q), logits=lg)
         for lat, vio, dev, alpha, spl, acc, pay, bw, q, lg in rows])
         for rows in results]
+    per_region = [
+        RegionStats(name=reg.name, rtt_offset_s=reg.rtt_offset_s,
+                    capacity=caps0[r], busy_s=busy[r],
+                    horizon_s=state["horizon"],
+                    capacity_timeline=list(cap_timelines[r]),
+                    offered=offered[r], spilled_out=spilled[r],
+                    served=served[r], batches=region_batches[r])
+        for r, reg in enumerate(rt.regions)]
     return FleetStats(per_stream=per_stream,
-                      cloud_busy_s=state["busy"],
+                      cloud_busy_s=sum(busy),
                       horizon_s=state["horizon"],
-                      capacity=capacity0,
+                      capacity=sum(caps0),
                       batch_sizes=batch_sizes,
                       dropped_per_stream=dropped,
-                      capacity_timeline=cap_timeline,
-                      stream_classes=[s.sla_class for s in streams])
+                      capacity_timeline=_merge_timelines(cap_timelines),
+                      stream_classes=[s.sla_class for s in streams],
+                      per_region=per_region,
+                      stream_regions=list(home_of))

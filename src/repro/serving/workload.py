@@ -24,6 +24,13 @@ the *policy* layer that composes those into a scenario:
     round-robin (``NetworkTrace.from_csv``).
   * **cloud autoscaling** — ``fleet.AutoscaleConfig``, forwarded to the
     runtime's utilization-driven controller.
+  * **cloud regions** — ``RegionConfig`` splits the shared tier into R
+    regional cells (per-region capacity, autoscaler, and an RTT offset in ms
+    on top of each homed stream's trace RTT). Streams are homed round-robin
+    (stream i → region i % R), the home offset is *baked into the stream's
+    trace* so the planner prices the distance in the engine's exact float
+    order, and ``spill_slack_ms`` sets the queue-delay threshold past which
+    a frame spills to another cell (paying the RTT difference).
 
 ``WorkloadSpec`` is JSON-loadable (``--workload spec.json`` in
 ``repro.launch.serve``); ``build_runtime`` turns a spec plus a fitted profile
@@ -319,6 +326,33 @@ def build_traces(cfg: NetworkConfig, n_streams: int, steps: int,
 
 
 # ---------------------------------------------------------------------------
+# cloud regions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionConfig:
+    """One regional cloud cell, JSON-facing (``"regions"`` in the workload
+    spec). ``capacity=None`` takes an even share of the fleet's default
+    total (``ceil(default_capacity / R)``), so adding regions redistributes
+    rather than multiplies the provisioned pool. ``rtt_ms`` is the extra
+    round-trip to this cell on top of a stream's trace RTT — streams homed
+    here pay it on every cloud-bound frame (baked into their trace), and
+    frames spilling *into* this cell pay the difference vs. their home."""
+    name: str = "cloud"
+    capacity: int | None = None
+    rtt_ms: float = 0.0
+    autoscale: fleet.AutoscaleConfig | None = None
+
+    def __post_init__(self):
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(
+                f"region capacity must be >= 1 or None, got {self.capacity}")
+        if self.rtt_ms < 0:
+            raise ValueError(f"region rtt_ms must be >= 0, got {self.rtt_ms}")
+
+
+# ---------------------------------------------------------------------------
 # per-stream randomness
 # ---------------------------------------------------------------------------
 
@@ -380,11 +414,18 @@ class WorkloadSpec:
     max_wait_ms: float | None = None
     batch_growth: float | None = None
     autoscale: fleet.AutoscaleConfig | None = None
+    # regional cloud cells (empty = the classic single shared tier); streams
+    # are homed round-robin, spilling over past spill_slack_ms of queue delay
+    regions: tuple[RegionConfig, ...] = ()
+    spill_slack_ms: float = 25.0
     name: str = "workload"
 
     def __post_init__(self):
         if self.n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {self.n_streams}")
+        if self.spill_slack_ms < 0:
+            raise ValueError(
+                f"spill_slack_ms must be >= 0, got {self.spill_slack_ms}")
         if self.n_frames < 1:
             raise ValueError(f"n_frames must be >= 1, got {self.n_frames}")
         if not self.tiers:
@@ -415,6 +456,16 @@ class WorkloadSpec:
         if d.get("autoscale") is not None:
             d["autoscale"] = _from_dict(fleet.AutoscaleConfig, d["autoscale"],
                                         "autoscale")
+        if "regions" in d:
+            regs = []
+            for r in d["regions"]:
+                r = dict(r)
+                if r.get("autoscale") is not None:
+                    r["autoscale"] = _from_dict(
+                        fleet.AutoscaleConfig, r["autoscale"],
+                        "region autoscale")
+                regs.append(_from_dict(RegionConfig, r, "region"))
+            d["regions"] = tuple(regs)
         if "tiers" in d:
             d["tiers"] = tuple(d["tiers"])
         if "sla_classes" in d:
@@ -432,6 +483,7 @@ class WorkloadSpec:
         d["sla_classes"] = list(self.sla_classes)
         d["arrivals"]["rate_schedule"] = \
             [list(p) for p in self.arrivals.rate_schedule]
+        d["regions"] = [dataclasses.asdict(r) for r in self.regions]
         return d
 
     # -- assembly -----------------------------------------------------------
@@ -445,10 +497,26 @@ class WorkloadSpec:
             over["max_wait_s"] = self.max_wait_ms / 1e3
         return dataclasses.replace(base, **over) if over else base
 
+    def resolved_regions(self) -> list[fleet.RegionSpec]:
+        """The spec's regions as runtime ``RegionSpec``s (empty = classic
+        single tier): ms → s, ``capacity=None`` → even share of the fleet's
+        configured total."""
+        if not self.regions:
+            return []
+        total = self.cloud_config().capacity
+        share = max(1, -(-total // len(self.regions)))
+        return [fleet.RegionSpec(
+            name=r.name,
+            capacity=r.capacity if r.capacity is not None else share,
+            rtt_offset_s=r.rtt_ms / 1e3,
+            autoscale=r.autoscale) for r in self.regions]
+
     def build_streams(self, profile: ModelProfile) -> list[fleet.StreamSpec]:
         """Per-stream specs: spawned-seed traces and arrivals, round-robin
-        device tiers applied to the fitted profile."""
+        device tiers applied to the fitted profile, round-robin region
+        affinity with the home region's RTT offset baked into the trace."""
         seqs = stream_seed_sequences(self.seed, self.n_streams)
+        n_regions = len(self.regions)
         specs = []
         for si, ss in enumerate(seqs):
             trace_ss, arrival_ss = ss.spawn(2)
@@ -471,11 +539,24 @@ class WorkloadSpec:
                 profile=None if prof is profile else prof,
                 tier=tier.name,
                 sla_class=self.sla_classes[si % len(self.sla_classes)],
-                accuracy_scale=tier.accuracy_scale))
+                accuracy_scale=tier.accuracy_scale,
+                region=si % n_regions if n_regions else 0))
         if self.network.kind == "csv":
             pool = csv_traces(self.network.path, self.network.rtt_ms / 1e3)
             specs = [dataclasses.replace(s, trace=pool[i % len(pool)])
                      for i, s in enumerate(specs)]
+        if n_regions:
+            # bake the home region's RTT offset into the trace so every
+            # planner/accounting path prices the distance in the engine's
+            # exact float order; a 0-offset region keeps the trace object
+            # untouched (bit-exact, and CSV pool traces stay shared)
+            offsets = [r.rtt_ms / 1e3 for r in self.regions]
+            specs = [
+                dataclasses.replace(
+                    s, trace=dataclasses.replace(
+                        s.trace, rtt_s=s.trace.rtt_s + offsets[s.region]))
+                if offsets[s.region] else s
+                for s in specs]
         return specs
 
 
@@ -489,4 +570,6 @@ def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
         model_cfg=model_cfg, params=params,
         autoscaler=spec.autoscale,
         sla_classes=spec.resolved_sla_classes(),
-        priority=spec.priority)
+        priority=spec.priority,
+        regions=spec.resolved_regions() or None,
+        spill_slack_s=spec.spill_slack_ms / 1e3)

@@ -77,7 +77,12 @@ def test_default_cloud_config_scales_capacity_with_streams():
     assert fleet.default_cloud_config(8).capacity == 1
     assert fleet.default_cloud_config(9).capacity == 2
     assert fleet.default_cloud_config(64).capacity == 8
-    assert fleet.default_cloud_config(1000).capacity == 32  # clamped
+    # no hard cap: city-scale fleets keep one executor per max_batch-worth
+    # of streams (the old min(32, ...) clamp pinned closed-loop N=4096 near
+    # total SLA violation)
+    assert fleet.default_cloud_config(1000).capacity == 125
+    assert fleet.default_cloud_config(4096).capacity == 512
+    assert fleet.default_cloud_config(65536).capacity == 8192
     # max_batch behavior unchanged
     assert fleet.default_cloud_config(1).max_batch == 1
     assert fleet.default_cloud_config(64).max_batch == 8
