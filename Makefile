@@ -6,18 +6,20 @@
 #   make bench-planner      per-decision planner bench -> BENCH_planner.json
 #   make bench-workload     workload-scenario sweep smoke -> BENCH_workload.json
 #   make bench-fleet-scale  event-heap core at N<=4096 -> BENCH_fleet_scale.json
+#   make bench-chaos        fault-injection chaos bench -> chaos section of
+#                           BENCH_fleet_scale.json (run after bench-fleet-scale)
 #   make check-regression   fresh BENCH artifacts vs benchmarks/baselines/
 #   make ci                 what .github/workflows/ci.yml runs
 #
 # After an intentional perf change, refresh the committed baselines:
-#   make bench-planner bench-workload bench-fleet-scale
+#   make bench-planner bench-workload bench-fleet-scale bench-chaos
 #   cp BENCH_planner.json BENCH_workload.json BENCH_fleet_scale.json benchmarks/baselines/
 
 PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-all lint bench-planner bench-workload bench-fleet-scale \
-	check-regression ci
+	bench-chaos check-regression ci
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -41,7 +43,11 @@ bench-workload:
 bench-fleet-scale:
 	python benchmarks/fleet_scale_bench.py --out BENCH_fleet_scale.json
 
+bench-chaos:
+	python benchmarks/chaos_bench.py --out BENCH_fleet_scale.json
+
 check-regression:
 	python benchmarks/check_regression.py
 
-ci: lint test bench-planner bench-workload bench-fleet-scale check-regression
+ci: lint test bench-planner bench-workload bench-fleet-scale bench-chaos \
+	check-regression

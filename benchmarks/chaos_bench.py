@@ -1,0 +1,181 @@
+"""Chaos benchmark: fault injection + recovery policy on the fleet runtime.
+
+One scenario, two policies, same fault trace. A 3-cell regional fleet
+(capacity 8/6/5, RTT offsets 0/20/40 ms, spillover routing on) serves 96
+Poisson streams of the paper's ViT-L@384 profile while the FaultSpec drives:
+
+  * cell r0 dark for ~20% of the run (capacity -> 0, in-flight batches and
+    queued offers lost),
+  * one executor crash in r1 (its running batch killed mid-flight),
+  * two per-stream network blackouts (uplink bandwidth -> 0 for a window).
+
+The ``recovery`` cell runs the full policy — deadline-aware retries with
+capped exponential backoff, per-region circuit breakers rerouting through
+the spillover path, device-only degradation as the last resort. The
+``naive`` cell replays the *identical* fault trace with ``max_retries=0``
+and no breaker: every lost offer degrades immediately, and the dark cell
+keeps swallowing offers for the whole outage because nothing learns to
+avoid it.
+
+The artifact lands as the ``chaos`` section of ``BENCH_fleet_scale.json``
+(merged into an existing file, so the fleet-scale rows survive) and is
+gated by ``benchmarks/check_regression.py``: exact frame conservation
+(served + degraded account for every offer — ``unaccounted_frames == 0``),
+exact completed/dropped counts (the simulator is seeded and deterministic),
+recovery-time ratio tolerance, a violation-during-outage budget, and the
+structural claim that recovery beats naive on violation-during-outage.
+
+  PYTHONPATH=src python benchmarks/chaos_bench.py --out BENCH_fleet_scale.json
+
+The scenario is already smoke-sized (<1 s of simulation past the one-time
+profile fit), so CI and local runs execute the identical cells.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+try:  # script (``python benchmarks/chaos_bench.py``) vs package (run.py)
+    import common  # noqa: F401  (adds src/ to sys.path)
+except ModuleNotFoundError:
+    from benchmarks import common
+
+from repro.core import engine  # noqa: E402
+from repro.serving import faults, workload  # noqa: E402
+
+N_STREAMS = 96
+FRAMES = 20
+SLA_MS = 300.0
+SEED = 7
+RATE_FPS = 8.0
+REGION_CAPS = (8, 6, 5)
+REGION_RTTS_MS = (0.0, 20.0, 40.0)
+# ~20% of the no-fault horizon (~6.8 s at this seed/load)
+OUTAGE_START_S, OUTAGE_DURATION_S = 0.8, 1.36
+WALL_BUDGET_S = 20.0   # per cell; ~100x measured local wall
+
+EPISODES = (
+    faults.FaultEpisode("region_outage", start_s=OUTAGE_START_S,
+                        duration_s=OUTAGE_DURATION_S, region=0),
+    faults.FaultEpisode("executor_crash", start_s=0.4, region=1),
+    faults.FaultEpisode("blackout", start_s=0.6, duration_s=0.3, stream=5),
+    faults.FaultEpisode("blackout", start_s=1.5, duration_s=0.3, stream=41),
+)
+
+POLICIES = {
+    "recovery": faults.FaultSpec(episodes=EPISODES),
+    "naive": faults.FaultSpec(episodes=EPISODES,
+                              retry=faults.RetryConfig(max_retries=0),
+                              breaker=None),
+}
+
+
+def scenario_spec(fault_spec: faults.FaultSpec) -> workload.WorkloadSpec:
+    return workload.WorkloadSpec(
+        n_streams=N_STREAMS, n_frames=FRAMES, seed=SEED, sla_ms=SLA_MS,
+        network=workload.NetworkConfig(network="wifi", mobility="static"),
+        arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=RATE_FPS,
+                                        max_inflight=8),
+        regions=tuple(
+            workload.RegionConfig(f"r{i}", capacity=REGION_CAPS[i],
+                                  rtt_ms=REGION_RTTS_MS[i])
+            for i in range(len(REGION_CAPS))),
+        faults=fault_spec,
+        name="chaos")
+
+
+def bench_cell(profile, policy: str) -> dict:
+    spec = scenario_spec(POLICIES[policy])
+    cfg = engine.EngineConfig(sla_s=SLA_MS / 1e3,
+                              include_scheduler_overhead=False)
+    rt = workload.build_runtime(spec, profile, cfg)
+    t0 = time.perf_counter()
+    fs = rt.run()
+    wall_s = time.perf_counter() - t0
+    return {
+        "policy": policy,
+        "streams": N_STREAMS,
+        "frames_per_stream": FRAMES,
+        "completed_frames": len(fs.all_frames),
+        "dropped": fs.total_dropped,
+        "unaccounted_frames": fs.unaccounted_frames,
+        "lost_offers": fs.total_lost_offers,
+        "retries": fs.total_retries,
+        "degraded": fs.total_degraded,
+        "breaker_trips": sum(r.breaker_trips for r in fs.recovery),
+        "mean_time_to_recover_s": fs.mean_time_to_recover_s,
+        "violation_ratio": fs.violation_ratio,
+        "violation_ratio_during_outage": fs.violation_ratio_during_outage,
+        "violation_ratio_steady": fs.violation_ratio_steady,
+        "outage_fraction": OUTAGE_DURATION_S / fs.horizon_s
+        if fs.horizon_s else 0.0,
+        "horizon_s": fs.horizon_s,
+        "per_region": [
+            {"name": r.name, "lost_offers": r.lost_offers,
+             "retries": r.retries, "degraded": r.degraded,
+             "breaker_trips": r.breaker_trips,
+             "mean_time_to_recover_s": r.mean_time_to_recover_s}
+            for r in fs.recovery],
+        "wall_s": wall_s,
+        "wall_budget_s": WALL_BUDGET_S,
+    }
+
+
+def run_cells() -> list[dict]:
+    profile = common.paper_profile()
+    cells = []
+    for policy in POLICIES:
+        c = bench_cell(profile, policy)
+        cells.append(c)
+        print(f"chaos {policy:9s} frames={c['completed_frames']:5d} "
+              f"dropped={c['dropped']:3d} unacct={c['unaccounted_frames']} "
+              f"lost={c['lost_offers']:4d} retries={c['retries']:3d} "
+              f"degraded={c['degraded']:4d} "
+              f"viol_out={c['violation_ratio_during_outage']:.3f} "
+              f"viol_steady={c['violation_ratio_steady']:.3f} "
+              f"mttr={c['mean_time_to_recover_s']*1e3:6.1f}ms "
+              f"wall={c['wall_s']:.2f}s")
+    return cells
+
+
+def rows():
+    """``benchmarks/run.py`` hook: one CSV row per policy cell."""
+    return [(f"chaos/{c['policy']}",
+             c["violation_ratio_during_outage"],
+             f"lost={c['lost_offers']} degraded={c['degraded']} "
+             f"unacct={c['unaccounted_frames']} wall={c['wall_s']:.2f}s")
+            for c in run_cells()]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fleet_scale.json",
+                    help="artifact to merge the 'chaos' section into "
+                         "(existing fleet-scale rows are preserved)")
+    args = ap.parse_args(argv)
+
+    cells = run_cells()
+    artifact = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            artifact = json.load(f)
+    artifact["chaos"] = {
+        "config": {"streams": N_STREAMS, "frames": FRAMES, "sla_ms": SLA_MS,
+                   "seed": SEED, "rate_fps": RATE_FPS,
+                   "region_caps": list(REGION_CAPS),
+                   "region_rtts_ms": list(REGION_RTTS_MS),
+                   "outage_start_s": OUTAGE_START_S,
+                   "outage_duration_s": OUTAGE_DURATION_S,
+                   "episodes": [e.kind for e in EPISODES]},
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[chaos_bench] wrote {len(cells)} cells -> {args.out} "
+          f"(section 'chaos')")
+
+
+if __name__ == "__main__":
+    main()

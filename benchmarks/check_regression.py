@@ -29,6 +29,14 @@ against the baselines committed under ``benchmarks/baselines/`` and fails
     each (N, SLA) group, more provisioned capacity never yields a higher
     violation ratio (sorted by capacity, the ratio is non-increasing up to
     ``--ratio-tol`` of seeded noise).
+  * **chaos recovery** (``chaos`` section of the fleet-scale artifact,
+    ``benchmarks/chaos_bench.py``): per-cell wall vs its embedded budget,
+    exact frame conservation under faults (``unaccounted_frames == 0`` for
+    both policies), exact completed/dropped/lost/retry/degrade counts vs
+    baseline, mean-time-to-recover at the wall ratio tolerance, a
+    violation-during-outage budget, and the structural claim that the
+    recovery policy beats naive no-retry on violation-during-outage under
+    the identical fault trace.
   * **structural gates** (claims the artifact must keep making at the
     baseline-pinned fleet sizes): the priority-vs-FIFO cell keeps the
     interactive class's violation ratio strictly below FIFO at equal load;
@@ -207,6 +215,74 @@ def check_region_frontier(gate: Gate, fresh: dict, base: dict | None,
                    + "<".join(str(c["capacity"]) for c in cells))
 
 
+# ------------------------------------------------------------------ chaos
+
+def check_chaos(gate: Gate, fresh: dict, base: dict | None,
+                time_tol: float, ratio_tol: float):
+    """Gates on the ``chaos`` section of the fleet-scale artifact (fault
+    injection + recovery, ``benchmarks/chaos_bench.py``): per-cell wall
+    against the cell's embedded budget, **exact** frame conservation
+    (every offered frame is served or degraded — ``unaccounted_frames``
+    must be 0 under faults, for *both* policies), exact completed/dropped
+    counts vs baseline (seeded + deterministic), mean-time-to-recover at
+    the wall ratio tolerance, a violation-during-outage budget vs
+    baseline, and the structural claim that the recovery policy (retries +
+    circuit breaker + degradation) beats the naive no-retry policy on
+    violation-during-outage under the identical fault trace."""
+    section = fresh.get("chaos")
+    if not section:
+        print("[check_regression] note: no chaos section in fleet-scale "
+              "artifact; skipping chaos gates")
+        return
+    cells = {c["policy"]: c for c in section.get("cells", [])}
+    base_cells = {} if base is None or not base.get("chaos") else \
+        {c["policy"]: c for c in base["chaos"].get("cells", [])}
+    gate.check({"recovery", "naive"} <= cells.keys(),
+               "chaos policies present", f"{sorted(cells)}")
+    for policy, c in cells.items():
+        cell = f"chaos [{policy}]"
+        gate.check(c["wall_s"] <= c["wall_budget_s"], f"{cell} wall budget",
+                   f"{c['wall_s']:.2f}s <= {c['wall_budget_s']:g}s")
+        # conservation is exact, not a tolerance: faults may lose frames
+        # in flight, but every loss must resurface as a retry's completion
+        # or a device-only degrade
+        gate.check(c["unaccounted_frames"] == 0,
+                   f"{cell} frame conservation",
+                   f"unaccounted_frames={c['unaccounted_frames']}")
+        b = base_cells.get(policy)
+        if b is None or (b["streams"], b["frames_per_stream"]) != \
+                (c["streams"], c["frames_per_stream"]):
+            continue
+        # seeded + deterministic: the faulted outcome must not drift
+        for field in ("completed_frames", "dropped", "lost_offers",
+                      "retries", "degraded"):
+            gate.check(c[field] == b[field], f"{cell} {field}",
+                       f"{c[field]} == {b[field]}")
+        gate.check(c["violation_ratio_during_outage"]
+                   <= b["violation_ratio_during_outage"] + ratio_tol,
+                   f"{cell} violation during outage",
+                   f"{c['violation_ratio_during_outage']:.4f} vs baseline "
+                   f"{b['violation_ratio_during_outage']:.4f} "
+                   f"(+{ratio_tol:g})")
+        if b["mean_time_to_recover_s"] > 0:
+            gate.check(c["mean_time_to_recover_s"]
+                       <= b["mean_time_to_recover_s"] * time_tol,
+                       f"{cell} mean time to recover",
+                       f"{c['mean_time_to_recover_s']*1e3:.1f}ms vs "
+                       f"baseline {b['mean_time_to_recover_s']*1e3:.1f}ms "
+                       f"(tol x{time_tol:g})")
+    rec, nai = cells.get("recovery"), cells.get("naive")
+    if rec is not None and nai is not None:
+        gate.check(rec["violation_ratio_during_outage"]
+                   < nai["violation_ratio_during_outage"],
+                   "chaos recovery beats naive during outage",
+                   f"{rec['violation_ratio_during_outage']:.4f} < "
+                   f"{nai['violation_ratio_during_outage']:.4f}")
+        gate.check(rec["dropped"] <= nai["dropped"],
+                   "chaos recovery drops <= naive",
+                   f"{rec['dropped']} <= {nai['dropped']}")
+
+
 # --------------------------------------------------------------- workload
 
 def _row_key(r: dict):
@@ -372,6 +448,7 @@ def main(argv=None) -> int:
         check_fleet_scale(gate, fresh_fs, base_fs, args.time_tol,
                           args.ratio_tol, args.max_cell_wall_s)
         check_region_frontier(gate, fresh_fs, base_fs, args.ratio_tol)
+        check_chaos(gate, fresh_fs, base_fs, args.time_tol, args.ratio_tol)
     gate.check(fresh_p is not None and fresh_w is not None
                and fresh_fs is not None,
                "fresh artifacts present",

@@ -14,7 +14,12 @@ Scenarios on the paper's ViT-L@384 timing profile:
      via the serving CLI's ``--workload`` flag,
   8. city-scale multi-region cloud: three regional cells at different
      distances (RTT offsets), streams homed round-robin, bursty load
-     spilling over between cells past the queue-delay slack.
+     spilling over between cells past the queue-delay slack,
+  9. cell blackout with failover: the near cell goes dark mid-run and the
+     recovery policy (retries + circuit breaker + spillover reroute +
+     device-only degradation) keeps frames flowing; the ``[fleet
+     recovery]`` report block shows losses, retries, breaker trips, and
+     the per-cell time-to-recover.
 
 The full JSON schema — including ``sla_class`` assignment, custom
 ``sla_class_defs``, ``regions``, and diurnal / rate-trace arrival schedules
@@ -93,3 +98,14 @@ serve.main(["--streams", "24", "--network", "wifi", "--mobility", "static",
             "--max-inflight", "4", "--capacity", "3", "--max-batch", "4",
             "--regions", "3", "--region-rtt-ms", "0,15,40",
             "--spill-slack-ms", "10", *BASE])
+
+print("\n=== 9. cell blackout with failover (faults + recovery) ===")
+# the near cell goes dark from t=1.0s for 1.5s, one stream loses its uplink
+# for 300ms; retries + the circuit breaker reroute through the other cells
+serve.main(["--streams", "24", "--network", "wifi", "--mobility", "static",
+            "--arrivals", "poisson", "--rate-fps", "8", "--max-inflight", "6",
+            "--capacity", "3", "--max-batch", "4",
+            "--regions", "3", "--region-rtt-ms", "0,15,40",
+            "--spill-slack-ms", "10",
+            "--fault-outage", "0@1.0+1.5", "--fault-blackout", "5@0.6+0.3",
+            *BASE])

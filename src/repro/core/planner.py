@@ -128,7 +128,13 @@ class PlannerTables:
     # -- vectorized Algorithm 1 ---------------------------------------------
     def latency_matrix(self, bandwidth_bps: float, rtt_s: float) -> np.ndarray:
         """E2E latency for every (α, split) candidate at one network state."""
-        comm = self.bits / bandwidth_bps + rtt_s * self.rtt_mask
+        if bandwidth_bps <= 0.0:
+            # dead link: every transfer column is unreachable, the device-only
+            # column (rtt_mask == 0, bits == 0) stays finite — argmin resolves
+            # deterministically to split = L instead of tripping on 0/0 = nan
+            comm = np.where(self.rtt_mask > 0.0, np.inf, 0.0)
+        else:
+            comm = self.bits / bandwidth_bps + rtt_s * self.rtt_mask
         return (self.dev_s + comm) + self.cloud_s
 
     def decide(self, bandwidth_bps: float, rtt_s: float, sla_s: float) -> Decision:

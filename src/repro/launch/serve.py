@@ -43,6 +43,18 @@ paying its home cell's extra RTT; frames spill to another cell past
 ``--spill-slack-ms`` of queue delay), with a per-region block — utilization,
 spillover ratio, capacity-seconds — in the fleet report.
 
+Fault injection (``--fault-outage R@START+DUR``, ``--fault-crash R@T``,
+``--fault-blackout S@START+DUR``): timed failure episodes on the fleet —
+a region going dark (in-flight batches lost), a single executor crash, or a
+stream's uplink dropping to zero — recovered via deadline-aware retries with
+capped exponential backoff (``--fault-retries``, ``--fault-backoff-ms``),
+per-region circuit breakers (``--fault-breaker-k``,
+``--fault-breaker-open-ms``; rerouting through the spillover path while
+open), and graceful degradation to device-only execution. A
+``[fleet recovery]`` block reports lost/retried/degraded frames, breaker
+trips, and violation-during-outage vs steady-state. See
+``benchmarks/chaos_bench.py`` for the gated recovery-vs-naive comparison.
+
 Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
 Algorithm-1 loop for comparison), and ``--streams N --execute`` runs the real
@@ -61,6 +73,7 @@ from repro.configs import get_arch
 from repro.core import bandwidth, engine, planner, profiler, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
+from repro.serving import faults as faults_lib
 from repro.serving import fleet as fleet_lib
 from repro.serving import sla as sla_lib
 from repro.serving import workload as workload_lib
@@ -79,6 +92,46 @@ def make_profile(cfg: vit_lib.ViTConfig, sla_note: str = "") -> scheduler.ModelP
         device_embed_s=profiler.EDGE_PLATFORM.embed_latency(cfg.num_tokens, cfg.d_model, pdim),
         cloud_embed_s=profiler.CLOUD_PLATFORM.embed_latency(cfg.num_tokens, cfg.d_model, pdim),
         head_s=profiler.CLOUD_PLATFORM.head_latency(cfg.d_model, cfg.n_classes))
+
+
+def _faults_from_args(args) -> faults_lib.FaultSpec | None:
+    """Fault-episode shorthands: ``--fault-outage R@START+DUR`` /
+    ``--fault-crash R@T`` / ``--fault-blackout S@START+DUR`` (indices are
+    region/stream numbers; times in seconds of sim time)."""
+    def _at(s):          # "idx@start" -> (idx, start)
+        idx, t = s.split("@", 1)
+        return int(idx), float(t)
+
+    def _window(s):      # "idx@start+dur" -> (idx, start, dur)
+        idx, rest = s.split("@", 1)
+        start, dur = rest.split("+", 1)
+        return int(idx), float(start), float(dur)
+
+    episodes = []
+    for s in args.fault_outage:
+        r, start, dur = _window(s)
+        episodes.append(faults_lib.FaultEpisode(
+            "region_outage", start_s=start, duration_s=dur, region=r))
+    for s in args.fault_crash:
+        r, start = _at(s)
+        episodes.append(faults_lib.FaultEpisode(
+            "executor_crash", start_s=start, region=r))
+    for s in args.fault_blackout:
+        si, start, dur = _window(s)
+        episodes.append(faults_lib.FaultEpisode(
+            "blackout", start_s=start, duration_s=dur, stream=si))
+    if not episodes:
+        return None
+    breaker = None if args.no_fault_breaker else faults_lib.BreakerConfig(
+        trip_after=args.fault_breaker_k,
+        open_s=args.fault_breaker_open_ms / 1e3)
+    return faults_lib.FaultSpec(
+        episodes=tuple(episodes),
+        retry=faults_lib.RetryConfig(
+            max_retries=args.fault_retries,
+            backoff_base_s=args.fault_backoff_ms / 1e3,
+            backoff_cap_s=args.fault_backoff_cap_ms / 1e3),
+        breaker=breaker)
 
 
 def spec_from_args(args) -> workload_lib.WorkloadSpec:
@@ -118,7 +171,8 @@ def spec_from_args(args) -> workload_lib.WorkloadSpec:
         network=network,
         capacity=args.capacity or None, max_batch=args.max_batch or None,
         max_wait_ms=args.batch_wait_ms, autoscale=autoscale,
-        regions=regions, spill_slack_ms=args.spill_slack_ms)
+        regions=regions, spill_slack_ms=args.spill_slack_ms,
+        faults=_faults_from_args(args))
 
 
 def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
@@ -185,6 +239,20 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
                   f"offered={rs.offered:6d} served={rs.served:6d} "
                   f"spill%={100*rs.spill_ratio:5.1f} "
                   f"cap_s={rs.capacity_seconds:8.2f}")
+    if fs.recovery:
+        print(f"[fleet recovery] lost={fs.total_lost_offers} "
+              f"retries={fs.total_retries} degraded={fs.total_degraded} "
+              f"unaccounted={fs.unaccounted_frames} "
+              f"mttr={fs.mean_time_to_recover_s*1e3:.1f}ms "
+              f"viol%(outage)={100*fs.violation_ratio_during_outage:.1f} "
+              f"viol%(steady)={100*fs.violation_ratio_steady:.1f}")
+        for rec in fs.recovery:
+            print(f"  {rec.name:10s} outages={rec.outages} "
+                  f"dark={rec.outage_s:5.2f}s lost={rec.lost_offers:4d} "
+                  f"retries={rec.retries:4d} degraded={rec.degraded:4d} "
+                  f"trips={rec.breaker_trips} "
+                  f"open={rec.breaker_open_s:5.2f}s "
+                  f"mttr={rec.mean_time_to_recover_s*1e3:7.1f}ms")
     return fs
 
 
@@ -265,6 +333,34 @@ def main(argv=None):
     ap.add_argument("--spill-slack-ms", type=float, default=25.0,
                     help="home-region queue delay past which a frame spills "
                          "to the cheapest other region")
+    ap.add_argument("--fault-outage", action="append", default=[],
+                    metavar="R@START+DUR",
+                    help="fleet mode: region R goes dark from START for DUR "
+                         "seconds (capacity -> 0, in-flight batches lost); "
+                         "repeatable")
+    ap.add_argument("--fault-crash", action="append", default=[],
+                    metavar="R@T",
+                    help="fleet mode: one executor of region R crashes at T "
+                         "seconds, killing its running batch; repeatable")
+    ap.add_argument("--fault-blackout", action="append", default=[],
+                    metavar="S@START+DUR",
+                    help="fleet mode: stream S's uplink drops to 0 bandwidth "
+                         "from START for DUR seconds; repeatable")
+    ap.add_argument("--fault-retries", type=int, default=3,
+                    help="retry budget per lost cloud offer (0 = naive: "
+                         "degrade to device-only immediately)")
+    ap.add_argument("--fault-backoff-ms", type=float, default=10.0,
+                    help="retry backoff base (doubles per attempt)")
+    ap.add_argument("--fault-backoff-cap-ms", type=float, default=160.0,
+                    help="retry backoff cap")
+    ap.add_argument("--fault-breaker-k", type=int, default=3,
+                    help="circuit breaker trips after K consecutive losses "
+                         "to a region")
+    ap.add_argument("--fault-breaker-open-ms", type=float, default=250.0,
+                    help="how long a tripped breaker stays open before its "
+                         "half-open probe")
+    ap.add_argument("--no-fault-breaker", action="store_true",
+                    help="disable per-region circuit breakers")
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
@@ -281,6 +377,8 @@ def main(argv=None):
             ("--trace-csv", bool(args.trace_csv)),
             ("--autoscale", args.autoscale),
             ("--regions", args.regions > 1 or bool(args.region_rtt_ms)),
+            ("--fault-*", bool(args.fault_outage or args.fault_crash
+                               or args.fault_blackout)),
         ] if used]
         if fleet_only:
             ap.error(f"{' '.join(fleet_only)} only work in fleet mode "

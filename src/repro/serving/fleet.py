@@ -114,6 +114,12 @@ from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import ModelProfile
 from repro.serving import sla as sla_lib
 from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
+from repro.serving.faults import FaultSpec, RecoveryStats
+
+__all__ = ["FleetRuntime", "FleetStats", "RegionStats", "RegionSpec",
+           "StreamSpec", "CloudTierConfig", "Autoscaler", "AutoscaleConfig",
+           "ClassStats", "FaultSpec", "RecoveryStats",
+           "default_cloud_config"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -424,6 +430,9 @@ class FleetStats:
     # one "cloud" entry); home region of stream i parallels per_stream
     per_region: list[RegionStats] = dataclasses.field(default_factory=list)
     stream_regions: list[int] = dataclasses.field(default_factory=list)
+    # per-region failure/recovery accounting (parallel to per_region); empty
+    # unless the runtime ran with a FaultSpec
+    recovery: list[RecoveryStats] = dataclasses.field(default_factory=list)
 
     @functools.cached_property
     def aggregate(self) -> RunStats:
@@ -549,6 +558,45 @@ class FleetStats:
         offered = sum(r.offered for r in self.per_region)
         return self.total_spilled / offered if offered else 0.0
 
+    # -- failure/recovery aggregates (0 / 0.0 without a FaultSpec) -----------
+    @property
+    def total_degraded(self) -> int:
+        return sum(r.degraded for r in self.recovery)
+
+    @property
+    def total_retries(self) -> int:
+        return sum(r.retries for r in self.recovery)
+
+    @property
+    def total_lost_offers(self) -> int:
+        return sum(r.lost_offers for r in self.recovery)
+
+    @property
+    def unaccounted_frames(self) -> int:
+        """Frame-conservation residual: every cloud-bound offer must end up
+        either served by some cell or degraded to device-only. Anything else
+        is a simulator bug — the chaos gate pins this to exactly 0."""
+        offered = sum(r.offered for r in self.per_region)
+        served = sum(r.served for r in self.per_region)
+        return offered - served - self.total_degraded
+
+    @property
+    def mean_time_to_recover_s(self) -> float:
+        times = [t for r in self.recovery for t in r.recovery_times_s]
+        return sum(times) / len(times) if times else 0.0
+
+    @property
+    def violation_ratio_during_outage(self) -> float:
+        frames = sum(r.frames_during_outage for r in self.recovery)
+        viol = sum(r.violations_during_outage for r in self.recovery)
+        return viol / frames if frames else 0.0
+
+    @property
+    def violation_ratio_steady(self) -> float:
+        frames = sum(r.frames_steady for r in self.recovery)
+        viol = sum(r.violations_steady for r in self.recovery)
+        return viol / frames if frames else 0.0
+
 
 @dataclasses.dataclass
 class _CloudItem:
@@ -571,7 +619,8 @@ class FleetRuntime:
                  sla_classes: dict[str, sla_lib.SlaClass] | None = None,
                  priority: bool | None = None,
                  regions: list[RegionSpec] | None = None,
-                 spill_slack_s: float = 0.025):
+                 spill_slack_s: float = 0.025,
+                 faults: FaultSpec | None = None):
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
         if isinstance(autoscaler, AutoscaleConfig):
@@ -600,6 +649,21 @@ class FleetRuntime:
                 raise ValueError(
                     f"stream region {s.region} out of range for "
                     f"{len(self.regions)} region(s)")
+        # an episode-free FaultSpec is the null fault model: keep the
+        # simulator on the exact faults=∅ code path (bit-exactness contract)
+        self.faults = faults if (faults is not None and faults.episodes) \
+            else None
+        if self.faults is not None:
+            for ep in self.faults.episodes:
+                if ep.kind in ("region_outage", "executor_crash") and \
+                        ep.region >= len(self.regions):
+                    raise ValueError(
+                        f"fault episode region {ep.region} out of range for "
+                        f"{len(self.regions)} region(s)")
+                if ep.kind == "blackout" and ep.stream >= len(streams):
+                    raise ValueError(
+                        f"blackout stream {ep.stream} out of range for "
+                        f"{len(streams)} stream(s)")
         self.sla_classes = dict(sla_classes) if sla_classes is not None \
             else dict(sla_lib.DEFAULT_SLA_CLASSES)
         # priority admission: explicit, or auto (on iff any stream deviates
@@ -655,6 +719,10 @@ class FleetRuntime:
                 "run_reference models the classic single shared tier; "
                 f"multi-region fleets ({len(self.regions)} regions) run on "
                 "the event-heap core (run())")
+        if self.faults is not None:
+            raise ValueError(
+                "run_reference has no failure model; fault-injected fleets "
+                "run on the event-heap core (run())")
         streams, cloud = self.streams, self.cloud
         estimators = [HarmonicMeanEstimator(cold_start_bps=float(np.mean(s.trace.bps)))
                       for s in streams]

@@ -79,13 +79,18 @@ import numpy as np
 from repro.core.bandwidth import HarmonicMeanEstimator
 from repro.core.engine import FrameResult, RunStats, run_cloud_batch
 from repro.serving.batcher import MicroBatcher, PriorityMicroBatcher, Request
+from repro.serving.faults import FaultManager
 
 # event kinds (heap entries are (time, seq, kind, payload) tuples; seq is the
 # global tie-break, assigned in push order exactly like the retired loop's).
 # ENQUEUE is spillover's deferred batcher entry: a frame routed to a non-home
 # region pays the extra round-trip RTT before joining that region's batch.
-ARRIVE, OFFER, POLL, FINISH, CONTROL, ENQUEUE = 0, 1, 2, 3, 4, 5
-EVENT_NAMES = ("arrive", "offer", "poll", "finish", "control", "enqueue")
+# FAULT realizes a FaultSpec episode boundary (outage start/end, crash);
+# RETRY re-offers a lost cloud frame after its backoff delay. Both exist only
+# when rt.faults is set, so the faults=∅ event stream is unchanged.
+ARRIVE, OFFER, POLL, FINISH, CONTROL, ENQUEUE, FAULT, RETRY = range(8)
+EVENT_NAMES = ("arrive", "offer", "poll", "finish", "control", "enqueue",
+               "fault", "retry")
 
 _WINDOW = 5          # HarmonicMeanEstimator's observation window
 _CHUNK_MIN, _CHUNK_MAX = 4, 64   # post-drop refill sizing (adaptive)
@@ -155,6 +160,14 @@ class AcctTables:
         vector: returns (α-index, split-index) per row with exactly the
         scalar path's semantics (first-min split tie-break, first-feasible
         α, global-argmin fallback)."""
+        est = np.asarray(est, dtype=np.float64)
+        dead = est <= 0.0
+        any_dead = bool(dead.any())
+        if any_dead:
+            # blackout rows: keep the chunk math finite (value irrelevant —
+            # the outputs are overwritten with the dead-link decision below);
+            # the all-positive path takes no copy and stays bit-identical
+            est = np.where(dead, 1.0, est)
         t = self.tables
         a_out = np.empty(len(est), dtype=np.int64)
         j_out = np.empty(len(est), dtype=np.int64)
@@ -184,7 +197,26 @@ class AcctTables:
             a_out[lo:lo + step] = a
             j_out[lo:lo + step] = np.take_along_axis(
                 best_j, a[:, None], axis=1)[:, 0]
+        if any_dead:
+            a0, j0 = self.decide_dead(rtt_s, sla_s)
+            a_out[dead] = a0
+            j_out[dead] = j0
         return a_out, j_out
+
+    def decide_dead(self, rtt_s: float, sla_s: float) -> tuple[int, int]:
+        """Scalar ``decide`` at bandwidth == 0: every transfer column is
+        unreachable (``latency_matrix`` makes them +inf), so the device-only
+        column — the one with ``rtt_mask == 0`` — wins for every α row;
+        α follows the usual first-feasible / global-argmin rule."""
+        t = self.tables
+        j = int(np.argmax(t.rtt_mask == 0.0))
+        lat = t.dev_s[:, j] + t.cloud_s[:, j]
+        feasible = lat <= sla_s
+        if feasible.any():
+            a = int(np.argmax(feasible))
+        else:
+            a = int(np.argmin(lat))
+        return a, j
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +287,8 @@ class _Pipe:
                  "valid", "chunk", "acct", "rtt", "sla", "acc_scale",
                  "bill_overhead", "ov",
                  "alpha", "split", "dev", "cloudp", "bits", "payload", "acc",
-                 "const_dev_total", "const_cloud", "const_acc", "const_split")
+                 "const_dev_total", "const_cloud", "const_acc", "const_split",
+                 "dead_row")
 
     def __init__(self, kind: int, frames: int, obs: list[float], cold: float,
                  acct: AcctTables, rtt: float, sla: float, acc_scale: float,
@@ -280,6 +313,7 @@ class _Pipe:
         self.const_dev_total = self.const_cloud = 0.0
         self.const_acc = 0.0
         self.const_split = 0
+        self.dead_row = None
 
     # -- filling -------------------------------------------------------------
     def load_rows(self, a_idx: np.ndarray, j_idx: np.ndarray) -> None:
@@ -360,6 +394,36 @@ class _Pipe:
                     0.0, split, self.const_acc, 0.0, b)
         return (self.const_dev_total, 0.0, 0.0, 0.0,
                 0.0, split, self.const_acc, 0.0, b)
+
+    # -- dead-link path (fault injection) ------------------------------------
+    def dead_decision(self) -> tuple[float, float, int, float]:
+        """``(dev_s, alpha, split, accuracy)`` under zero bandwidth — the
+        decision the scalar planner makes on a dead link (device-only, the
+        only finite column of ``latency_matrix(0, ·)``). Cached per pipe."""
+        if self.dead_row is None:
+            acct = self.acct
+            if self.kind == _TABLES:
+                a, j = acct.decide_dead(self.rtt, self.sla)
+                self.dead_row = (float(acct.dev[a, j]), float(acct.alpha[a]),
+                                 int(acct.cand[j]),
+                                 float(acct.acc[a]) * self.acc_scale)
+            else:
+                self.dead_row = (self.const_dev_total, 0.0,
+                                 acct.device_only_split, self.const_acc)
+        return self.dead_row
+
+    def take_dead(self, fi: int):
+        """Plan admitted frame ``fi`` under a network blackout. The observed
+        bandwidth is 0 — skipped by the estimator, so the committed window
+        and the next pending decision both survive — but speculated entries
+        past the pending one assumed this frame committed ``obs[fi]``, so
+        they expire exactly like a drop's. Same return shape as ``take``."""
+        self.arrived += 1
+        if self.kind != _CONST and self.valid > self.pos + 1:
+            self.valid = self.pos + 1
+            self.chunk = max(_CHUNK_MIN, self.chunk // 2)
+        dev, alpha, split, acc = self.dead_decision()
+        return (dev, 0.0, 0.0, 0.0, alpha, split, acc, 0.0, 0.0)
 
 
 def _build_pipes(rt) -> list:
@@ -490,6 +554,17 @@ def simulate(rt, images=None, record: list | None = None):
     engine_mode = (rt._execute and images is not None) or \
         any(e.cfg.planner == "legacy" for e in rt.engines)
     pipes = [None] * n_streams if engine_mode else _build_pipes(rt)
+    fm = None
+    if getattr(rt, "faults", None) is not None:
+        if engine_mode:
+            raise ValueError(
+                "fault injection requires the vectorized planner path "
+                "(incompatible with execute-with-images and planner='legacy')")
+        if any(p is None for p in pipes):
+            raise ValueError(
+                "fault injection requires in-order arrival times "
+                "for every stream")
+        fm = FaultManager(rt.faults, len(rt.regions), n_streams)
     estimators = [None] * n_streams
     for si, spec in enumerate(streams):
         if pipes[si] is None:
@@ -570,8 +645,12 @@ def simulate(rt, images=None, record: list | None = None):
     def plan_frame(si: int, fi: int, t0: float) -> None:
         pipe = pipes[si]
         if pipe is not None:
-            (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
-             b_true) = pipe.take(fi)
+            if fm is not None and fm.blacked_out(si, t0):
+                (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
+                 b_true) = pipe.take_dead(fi)
+            else:
+                (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
+                 b_true) = pipe.take(fi)
             plan = None
         else:
             eng, spec = rt.engines[si], streams[si]
@@ -594,7 +673,7 @@ def simulate(rt, images=None, record: list | None = None):
         if engine_mode:
             exec_plans.append(plan)
         if cloud_s <= 0.0:            # device-only: never touches the cloud
-            push(local_done, FINISH, rid)
+            push(local_done, FINISH, rid if fm is None else (rid, -1))
         else:
             push(local_done, OFFER, rid)
 
@@ -603,14 +682,20 @@ def simulate(rt, images=None, record: list | None = None):
         would wait for an executor. Read-only on the busy-until heap (the
         lazy slot retirement stays in dispatch)."""
         ex = executors[r]
-        if len(ex) < caps[r] or ex[0] <= now:
+        if len(ex) < caps[r] or (ex and ex[0] <= now):
             return 0.0
-        return ex[0] - now
+        # caps can be 0 (outage) with an already-cleared heap; an empty heap
+        # reads as no wait — the routing policy discovers a dark cell by
+        # losing to it, never by peeking at ground truth
+        return ex[0] - now if ex else 0.0
 
     def offer(rid: int, now: float) -> None:
         rec = recs[rid]
         home = home_of[rec[0]]
         offered[home] += 1
+        if fm is not None:
+            route(rid, home, now, retry=False)
+            return
         if n_regions > 1 and queue_delay(home, now) > rt.spill_slack_s:
             # spillover: cheapest cell by estimated wait + extra distance;
             # ties keep the frame home (strict < below)
@@ -632,7 +717,47 @@ def simulate(rt, images=None, record: list | None = None):
                 return
         enqueue(rid, home, now)
 
+    def route(rid: int, home: int, now: float, retry: bool) -> None:
+        """Fault-aware routing: the spillover policy filtered through the
+        circuit breakers. Only *observable* state is consulted — breaker
+        position and queue estimates — never ``fm.down`` ground truth. No
+        admittable cell at all means graceful degradation to device-only."""
+        home_ok = fm.admits(home, now)
+        if home_ok and (n_regions == 1
+                        or queue_delay(home, now) <= rt.spill_slack_s):
+            target = home
+        else:
+            if home_ok:
+                target, best_cost = home, queue_delay(home, now)
+            else:
+                target, best_cost = None, float("inf")
+            for r in range(n_regions):
+                if r == home or not fm.admits(r, now):
+                    continue
+                cost = queue_delay(r, now) + max(0.0, off[r] - off[home])
+                if cost < best_cost:
+                    target, best_cost = r, cost
+        if target is None:
+            degrade(rid, now)
+            return
+        if target != home and not retry:
+            spilled[home] += 1
+        fm.note_route(rid, target, now)
+        delta = max(0.0, off[target] - off[home])
+        if retry:
+            delta += recs[rid][4]     # the resend pays the uplink again
+        if delta > 0.0:
+            push(now + delta, ENQUEUE, (rid, target))
+        else:
+            enqueue(rid, target, now)
+
     def enqueue(rid: int, r: int, now: float) -> None:
+        if fm is not None and fm.down[r]:
+            # the cell is dark: the frame dies in transport/queue. Observed
+            # by the caller only through the loss (breaker bookkeeping).
+            fm.lost_pending[r] += 1
+            on_loss(rid, now)
+            return
         cloud_arrivals[r] += 1
         rec = recs[rid]
         si = rec[0]
@@ -650,6 +775,8 @@ def simulate(rt, images=None, record: list | None = None):
             push(micro.deadline(), POLL, r)
 
     def poll(r: int, now: float) -> None:
+        if fm is not None and fm.down[r]:
+            return          # queue already drained at outage start
         batch = micros[r].poll(now)
         if batch is not None:
             dispatch(r, batch, now)
@@ -678,12 +805,43 @@ def simulate(rt, images=None, record: list | None = None):
         region_batches[r] += 1
         served[r] += len(batch)
         done = start + service
-        for rid in members:
-            push(done, FINISH, rid)
+        if fm is not None:
+            # FINISH carries (rid, batch-token): a later kill voids the
+            # token, so stale completions of dead batches are discarded even
+            # after the rid is re-dispatched under a fresh token
+            bid = next(fm.bid_seq)
+            fm.live[r][bid] = done
+            fm.batch_members[bid] = members
+            for rid in members:
+                fm.batch_of[rid] = bid
+                push(done, FINISH, (rid, bid))
+        else:
+            for rid in members:
+                push(done, FINISH, rid)
 
-    def finish(rid: int, tf: float) -> None:
+    def finish(rid: int, tf: float, token: int = -1) -> None:
         (si, fi, t0, dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
          b_true) = recs[rid]
+        if fm is not None:
+            if token >= 0:
+                if token in fm.dead_batches:
+                    return      # stale completion of a killed batch
+                fm.batch_of.pop(rid, None)
+                r = fm.pending_region.pop(rid)
+                fm.live[r].pop(token, None)
+                br = fm.breakers[r]
+                if br is not None:
+                    br.record_success(tf)
+                t_up = fm.awaiting_recovery[r]
+                if t_up is not None and tf >= t_up:
+                    # first cloud completion after the cell came back
+                    fm.recovery_times[r].append(tf - t_up)
+                    fm.awaiting_recovery[r] = None
+            else:
+                fm.pending_region.pop(rid, None)
+            o = fm.override.pop(rid, None)
+            if o is not None:   # degraded: report the device-only rerun
+                dev_s, comm_s, cloud_s, alpha, split, acc = o
         total_s = dev_s + comm_s + cloud_s
         standalone = total_s + ov
         queue_s = tf - t0 - standalone
@@ -699,6 +857,8 @@ def simulate(rt, images=None, record: list | None = None):
         state["horizon"] = max(state["horizon"], tf)
         state["remaining"] -= 1
         inflight[si] -= 1
+        if fm is not None:
+            fm.note_frame(home_of[si], si, t0, tf, lat > sla)
         spec = streams[si]
         if spec.arrival_times is None and fi + 1 < spec.n_frames:
             arrive(si, fi + 1, max(tf, t0 + spec.period_s))
@@ -715,6 +875,12 @@ def simulate(rt, images=None, record: list | None = None):
     def control(r: int, now: float) -> None:
         scaler = scalers[r]
         window = scaler.cfg.interval_s
+        if fm is not None and fm.down[r]:
+            # capacity is pinned at 0 for the outage; the scaler must not
+            # resurrect a dark cell, so skip the decision but keep the timer
+            if state["remaining"] > 0:
+                push(now + window, CONTROL, r)
+            return
         if scaler.cfg.policy == "predictive":
             scaler.observe_rate(cloud_arrivals[r], window)
             cloud_arrivals[r] = 0
@@ -735,6 +901,120 @@ def simulate(rt, images=None, record: list | None = None):
         if state["remaining"] > 0:
             push(now + window, CONTROL, r)
 
+    # -- failure recovery (all closures below only run when fm is set) -------
+    def on_loss(rid: int, now: float) -> None:
+        """A cloud offer died (dark cell, killed batch). Charge the breaker
+        of the region it was pending on, then retry with backoff while the
+        budget lasts; after that, degrade to device-only."""
+        r = fm.pending_region.pop(rid, None)
+        if r is not None:
+            br = fm.breakers[r]
+            if br is not None:
+                br.record_failure(now)
+        attempts = fm.attempts.get(rid, 0) + 1
+        fm.attempts[rid] = attempts
+        if attempts <= fm.retry.max_retries:
+            fm.retries[home_of[recs[rid][0]]] += 1
+            push(now + fm.retry.backoff_s(attempts), RETRY, rid)
+        else:
+            degrade(rid, now)
+
+    def replan_keeps_cloud(si: int, rid: int, now: float) -> bool:
+        """Re-plan the frame against the current committed estimate and the
+        SLA slack it has left: is offloading still the right call? (The
+        resend reuses the original payload; this is the go/no-go check.)"""
+        pipe = pipes[si]
+        sla_rem = max(0.0, recs[rid][2] + sla_eff[si] - now)
+        if pipe.kind == _CONST:
+            return pipe.const_split == 0    # cloud baseline never re-plans
+        win = pipe.window
+        if win:
+            s = 0.0
+            for v in win:
+                s += 1.0 / v
+            est = len(win) / s
+        else:
+            est = pipe.cold
+        if est <= 0.0:
+            return False
+        acct = pipe.acct
+        if pipe.kind == _MIXED:
+            lat_c = (acct.raw8 / est + pipe.rtt) + pipe.const_cloud
+            return lat_c < pipe.const_dev_total
+        _, j = acct.decide_batch(np.asarray([est]), pipe.rtt, sla_rem)
+        return int(acct.cand[j[0]]) != acct.device_only_split
+
+    def retry_frame(rid: int, now: float) -> None:
+        si = recs[rid][0]
+        if fm.blacked_out(si, now) or not replan_keeps_cloud(si, rid, now):
+            degrade(rid, now)
+            return
+        route(rid, home_of[si], now, retry=True)
+
+    def degrade(rid: int, now: float) -> None:
+        """Graceful degradation: rerun the frame device-only, serialized on
+        its stream's device like any other device phase."""
+        si = recs[rid][0]
+        fm.degraded[home_of[si]] += 1
+        dev_s, alpha, split, acc = pipes[si].dead_decision()
+        fm.override[rid] = (dev_s, 0.0, 0.0, alpha, split, acc)
+        fm.pending_region.pop(rid, None)
+        start = max(now, device_free[si])
+        device_free[si] = start + dev_s
+        push(device_free[si], FINISH, (rid, -1))
+
+    def kill_batch(r: int, bid: int, now: float) -> None:
+        done = fm.live[r].pop(bid)
+        fm.dead_batches.add(bid)
+        members = fm.batch_members.pop(bid)
+        served[r] -= len(members)
+        busy[r] -= max(0.0, done - now)   # the executor stopped burning time
+        fm.lost_inflight[r] += len(members)
+        for rid in members:
+            fm.batch_of.pop(rid, None)
+            on_loss(rid, now)
+
+    def fault_event(idx: int, phase: int, now: float) -> None:
+        ep = rt.faults.episodes[idx]
+        r = ep.region
+        if ep.kind == "executor_crash":
+            live = [(done, bid) for bid, done in fm.live[r].items()
+                    if done > now]
+            if not live:
+                return
+            done, bid = min(live)
+            kill_batch(r, bid, now)
+            ex = executors[r]
+            if done in ex:              # free the dead batch's slot
+                ex.remove(done)
+                heapq.heapify(ex)
+            return
+        # region outage boundaries
+        if phase == 0:
+            if fm.down[r]:
+                return                  # overlapping windows: already dark
+            fm.down[r] = True
+            fm.outages[r] += 1
+            fm.outage_s[r] += ep.duration_s
+            fm.saved_cap[r] = caps[r]
+            fm.awaiting_recovery[r] = None
+            for bid, done in list(fm.live[r].items()):
+                if done <= now:
+                    fm.live[r].pop(bid)     # completed before the outage
+                else:
+                    kill_batch(r, bid, now)
+            executors[r].clear()
+            for req in micros[r].flush():   # queued frames die with the cell
+                fm.lost_pending[r] += 1
+                on_loss(req.rid, now)
+            caps[r] = 0
+            cap_timelines[r].append((now, 0))
+        else:
+            fm.down[r] = False
+            caps[r] = fm.saved_cap[r]
+            cap_timelines[r].append((now, caps[r]))
+            fm.awaiting_recovery[r] = now
+
     for si, spec in enumerate(streams):
         if spec.arrival_times is None:
             arrive(si, 0, 0.0)
@@ -744,6 +1024,14 @@ def simulate(rt, images=None, record: list | None = None):
     for r, scaler in enumerate(scalers):
         if scaler is not None:
             push(scaler.cfg.interval_s, CONTROL, r)
+    if fm is not None:
+        for i, ep in enumerate(rt.faults.episodes):
+            if ep.kind == "region_outage":
+                push(ep.start_s, FAULT, (i, 0))
+                push(ep.end_s, FAULT, (i, 1))
+            elif ep.kind == "executor_crash":
+                push(ep.start_s, FAULT, (i, 0))
+            # blackouts are plan-time lookups: no heap events needed
 
     while True:
         while events:
@@ -751,7 +1039,10 @@ def simulate(rt, images=None, record: list | None = None):
             if record is not None:
                 record.append((t, EVENT_NAMES[kind], payload))
             if kind == FINISH:
-                finish(payload, t)
+                if fm is None:
+                    finish(payload, t)
+                else:
+                    finish(payload[0], t, payload[1])
             elif kind == OFFER:
                 offer(payload, t)
             elif kind == ARRIVE:
@@ -760,6 +1051,10 @@ def simulate(rt, images=None, record: list | None = None):
                 poll(payload, t)
             elif kind == ENQUEUE:
                 enqueue(payload[0], payload[1], t)
+            elif kind == FAULT:
+                fault_event(payload[0], payload[1], t)
+            elif kind == RETRY:
+                retry_frame(payload, t)
             else:
                 control(payload, t)
         pending = [r for r in range(n_regions) if micros[r].pending_count]
@@ -783,6 +1078,8 @@ def simulate(rt, images=None, record: list | None = None):
                     offered=offered[r], spilled_out=spilled[r],
                     served=served[r], batches=region_batches[r])
         for r, reg in enumerate(rt.regions)]
+    recovery = fm.region_stats([reg.name for reg in rt.regions],
+                               state["horizon"]) if fm is not None else []
     return FleetStats(per_stream=per_stream,
                       cloud_busy_s=sum(busy),
                       horizon_s=state["horizon"],
@@ -792,4 +1089,5 @@ def simulate(rt, images=None, record: list | None = None):
                       capacity_timeline=_merge_timelines(cap_timelines),
                       stream_classes=[s.sla_class for s in streams],
                       per_region=per_region,
-                      stream_regions=list(home_of))
+                      stream_regions=list(home_of),
+                      recovery=recovery)

@@ -53,6 +53,7 @@ from repro.core import bandwidth, planner, profiler
 from repro.core.bandwidth import NetworkTrace
 from repro.core.engine import EngineConfig
 from repro.core.scheduler import ModelProfile
+from repro.serving import faults as faults_lib
 from repro.serving import fleet
 from repro.serving import sla as sla_lib
 
@@ -418,6 +419,9 @@ class WorkloadSpec:
     # are homed round-robin, spilling over past spill_slack_ms of queue delay
     regions: tuple[RegionConfig, ...] = ()
     spill_slack_ms: float = 25.0
+    # timed fault episodes + recovery policy (None = no failure model);
+    # times inside are simulator seconds, like autoscale's interval_s
+    faults: faults_lib.FaultSpec | None = None
     name: str = "workload"
 
     def __post_init__(self):
@@ -466,6 +470,8 @@ class WorkloadSpec:
                         "region autoscale")
                 regs.append(_from_dict(RegionConfig, r, "region"))
             d["regions"] = tuple(regs)
+        if d.get("faults") is not None:
+            d["faults"] = faults_lib.FaultSpec.from_dict(d["faults"])
         if "tiers" in d:
             d["tiers"] = tuple(d["tiers"])
         if "sla_classes" in d:
@@ -484,6 +490,8 @@ class WorkloadSpec:
         d["arrivals"]["rate_schedule"] = \
             [list(p) for p in self.arrivals.rate_schedule]
         d["regions"] = [dataclasses.asdict(r) for r in self.regions]
+        if self.faults is not None:
+            d["faults"] = self.faults.to_dict()
         return d
 
     # -- assembly -----------------------------------------------------------
@@ -572,4 +580,5 @@ def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
         sla_classes=spec.resolved_sla_classes(),
         priority=spec.priority,
         regions=spec.resolved_regions() or None,
-        spill_slack_s=spec.spill_slack_ms / 1e3)
+        spill_slack_s=spec.spill_slack_ms / 1e3,
+        faults=spec.faults)

@@ -1,0 +1,169 @@
+"""Fault-tolerance policy machinery (repro.runtime.fault_tolerance):
+heartbeat liveness with dynamic registration, straggler flagging, elastic
+mesh re-planning, and the deterministic circuit-breaker state machine the
+fleet recovery path (repro.serving.faults) is built on.
+"""
+import pytest
+
+from repro.runtime.fault_tolerance import (BreakerConfig, CircuitBreaker,
+                                           HeartbeatMonitor, StragglerDetector,
+                                           plan_elastic_mesh)
+
+
+# ---------------------------------------------------------------- heartbeat
+
+def test_heartbeat_declares_silent_worker_failed():
+    hb = HeartbeatMonitor(["w0", "w1"], timeout_steps=3)
+    for _ in range(2):
+        hb.beat("w0", step=hb.step)
+        assert hb.tick() == []
+    assert hb.alive() == ["w0", "w1"]  # w1 at 2 missed beats: not yet failed
+    hb.beat("w0", step=hb.step)
+    assert hb.tick() == ["w1"]
+    assert hb.alive() == ["w0"]
+
+
+def test_heartbeat_beat_registers_unknown_worker():
+    """A beat from a worker the monitor was not constructed with enrolls it:
+    tick()/alive() track it from that beat on instead of silently ignoring
+    it (the pre-fix behavior dropped the beat on the floor)."""
+    hb = HeartbeatMonitor(["w0"], timeout_steps=2)
+    hb.beat("late-joiner")
+    assert "late-joiner" in hb.workers
+    assert "late-joiner" in hb.alive()
+    # it is now subject to the same liveness rule as everyone else
+    hb.beat("w0", step=hb.step)
+    assert hb.tick() == []
+    hb.beat("w0", step=hb.step)
+    assert hb.tick() == ["late-joiner"]
+
+
+def test_heartbeat_default_step_is_current_step():
+    hb = HeartbeatMonitor(["w0"], timeout_steps=2)
+    hb.tick()
+    hb.beat("w0")  # no explicit step -> stamped with hb.step
+    assert hb.last_beat["w0"] == hb.step
+    assert hb.tick() == []
+
+
+def test_heartbeat_recovered_worker_comes_back():
+    hb = HeartbeatMonitor(["w0", "w1"], timeout_steps=2)
+    hb.beat("w0", step=0)
+    hb.tick(), hb.tick()
+    assert "w1" not in hb.alive()
+    hb.beat("w1")  # resumed beating
+    assert set(hb.alive()) == {"w1"}
+
+
+# --------------------------------------------------------------- straggler
+
+def test_straggler_needs_patience_consecutive_slow_steps():
+    sd = StragglerDetector(factor=1.5, patience=3)
+    fast = {"w0": 1.0, "w1": 1.0, "w2": 1.0}
+    slow = {"w0": 1.0, "w1": 1.0, "w2": 4.0}
+    assert sd.observe(slow) == []
+    assert sd.observe(slow) == []
+    assert sd.observe(slow) == ["w2"]
+    # one fast step resets the strike counter
+    assert sd.observe(fast) == []
+    assert sd.observe(slow) == []
+
+
+def test_straggler_uniform_fleet_never_flags():
+    sd = StragglerDetector(factor=1.5, patience=1)
+    for _ in range(5):
+        assert sd.observe({"w0": 2.0, "w1": 2.0, "w2": 2.0}) == []
+
+
+# ------------------------------------------------------------ elastic mesh
+
+def test_plan_elastic_mesh_preserves_tp_and_shrinks_dp():
+    plan = plan_elastic_mesh(surviving_devices=24, model_parallel=4)
+    assert plan.model == 4
+    assert plan.data == 4  # 24 // 4 = 6 -> largest power of two <= 6
+    assert plan.devices == 16
+
+
+def test_plan_elastic_mesh_exact_fit():
+    plan = plan_elastic_mesh(surviving_devices=8, model_parallel=4)
+    assert (plan.data, plan.model, plan.devices) == (2, 4, 8)
+
+
+def test_plan_elastic_mesh_insufficient_survivors_raises():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(surviving_devices=3, model_parallel=4)
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(surviving_devices=7, model_parallel=4, min_data=2)
+
+
+# --------------------------------------------------------- circuit breaker
+
+def test_breaker_config_validation():
+    with pytest.raises(ValueError):
+        BreakerConfig(trip_after=0)
+    with pytest.raises(ValueError):
+        BreakerConfig(open_s=0.0)
+
+
+def test_breaker_trips_after_consecutive_failures():
+    cb = CircuitBreaker(BreakerConfig(trip_after=3, open_s=1.0))
+    cb.record_failure(0.1)
+    cb.record_failure(0.2)
+    assert cb.state == "closed" and cb.admits(0.2)
+    cb.record_failure(0.3)
+    assert cb.state == "open" and cb.trips == 1
+    assert not cb.admits(0.5)
+
+
+def test_breaker_success_resets_failure_streak():
+    cb = CircuitBreaker(BreakerConfig(trip_after=2, open_s=1.0))
+    cb.record_failure(0.1)
+    cb.record_success(0.2)
+    cb.record_failure(0.3)
+    assert cb.state == "closed"  # streak broken: 1 failure, not 2
+
+
+def test_breaker_half_open_probe_lifecycle():
+    cb = CircuitBreaker(BreakerConfig(trip_after=1, open_s=0.5))
+    cb.record_failure(1.0)
+    assert cb.state == "open" and not cb.admits(1.4)
+    # open_s elapsed: exactly one probe is admitted, and *peeking* via
+    # admits() never consumes it — only note_dispatch() does
+    assert cb.admits(1.6) and cb.admits(1.6)
+    assert cb.state == "half_open"
+    cb.note_dispatch(1.6)
+    assert not cb.admits(1.7), "probe in flight: no second request"
+    cb.record_success(1.9)
+    assert cb.state == "closed" and cb.admits(1.9)
+    assert cb.trips == 1
+
+
+def test_breaker_failed_probe_reopens_fresh_window():
+    cb = CircuitBreaker(BreakerConfig(trip_after=1, open_s=0.5))
+    cb.record_failure(1.0)
+    cb.note_dispatch(1.6)  # half-open probe
+    cb.record_failure(1.8)
+    assert cb.state == "open" and cb.trips == 2
+    assert cb.opened_at == 1.8, "re-open starts a fresh window"
+    assert not cb.admits(2.2) and cb.admits(2.3 + 1e-9)
+
+
+def test_breaker_late_losses_do_not_extend_open_window():
+    """Losses of requests dispatched before the trip land while the breaker
+    is already open; they must not reset opened_at (else a burst of stale
+    losses keeps the breaker open forever)."""
+    cb = CircuitBreaker(BreakerConfig(trip_after=1, open_s=0.5))
+    cb.record_failure(1.0)
+    cb.record_failure(1.4)  # stale loss while open
+    assert cb.opened_at == 1.0 and cb.trips == 1
+    assert cb.admits(1.6)
+
+
+def test_breaker_open_seconds_accounting():
+    cb = CircuitBreaker(BreakerConfig(trip_after=1, open_s=0.5))
+    assert cb.open_seconds(5.0) == 0.0
+    cb.record_failure(1.0)
+    assert cb.open_seconds(1.3) == pytest.approx(0.3)
+    cb.note_dispatch(1.6)
+    cb.record_success(2.0)  # closed: interval [1.0, 2.0] fully resolved
+    assert cb.open_seconds(9.9) == pytest.approx(1.0)

@@ -213,3 +213,73 @@ def test_home_region_rtt_baked_into_trace():
             assert s.trace.rtt_s == b.trace.rtt_s
         else:
             assert s.trace.rtt_s == pytest.approx(b.trace.rtt_s + 0.050)
+
+
+# ------------------------------------------------------- dead cell mid-run
+
+def _dead_cell_spec(with_breaker=True, max_retries=3):
+    """Phone-tier devices + 60 ms SLA force every frame to offer to the
+    cloud (device-only is 4x too slow), so the dark cell genuinely attracts
+    traffic it can lose."""
+    from repro.serving import faults as faults_lib
+    return workload.WorkloadSpec(
+        n_streams=24, n_frames=15, seed=7, network=_WIFI, max_batch=4,
+        sla_ms=60.0, tiers=("phone",), spill_slack_ms=10.0,
+        regions=(workload.RegionConfig("a", capacity=2),
+                 workload.RegionConfig("b", capacity=2, rtt_ms=5.0),
+                 workload.RegionConfig("c", capacity=2, rtt_ms=10.0)),
+        arrivals=workload.ArrivalConfig(kind="poisson", rate_fps=8.0,
+                                        max_inflight=6),
+        faults=faults_lib.FaultSpec(
+            episodes=(faults_lib.FaultEpisode(
+                "region_outage", start_s=0.4, duration_s=0.5, region=0),),
+            retry=faults_lib.RetryConfig(max_retries=max_retries),
+            breaker=(faults_lib.BreakerConfig(trip_after=2, open_s=0.1)
+                     if with_breaker else None)))
+
+
+def test_dead_cell_conserves_frames_exactly():
+    """One cell dark mid-run: every cloud offer is still served or degraded
+    (unaccounted == 0), and regional served-counts absorb the rerouted
+    load."""
+    rt = workload.build_runtime(_dead_cell_spec(), _profile(), _cfg(0.060))
+    fs = rt.run()
+    assert fs.unaccounted_frames == 0
+    assert fs.recovery[0].outages == 1
+    assert fs.recovery[0].lost_offers > 0
+    offered = sum(r.offered for r in fs.per_region)
+    served = sum(r.served for r in fs.per_region)
+    assert offered == served + fs.total_degraded
+
+
+def test_breaker_stops_feeding_dead_cell():
+    """While cell a's breaker is open, the dark cell stops receiving
+    traffic: its losses are bounded by the discovery cost (``trip_after``
+    trial losses) plus at most one half-open probe per open window. The
+    naive breaker-less run keeps feeding the dead home cell for the whole
+    outage and loses strictly more."""
+    spec = _dead_cell_spec()
+    fs = workload.build_runtime(spec, _profile(), _cfg(0.060)).run()
+    ep = spec.faults.episodes[0]
+    open_windows = ep.duration_s / spec.faults.breaker.open_s
+    assert fs.recovery[0].breaker_trips >= 1
+    assert fs.recovery[0].lost_offers <= \
+        spec.faults.breaker.trip_after + open_windows + 1
+    fs_naive = workload.build_runtime(
+        _dead_cell_spec(with_breaker=False, max_retries=0),
+        _profile(), _cfg(0.060)).run()
+    assert fs_naive.unaccounted_frames == 0
+    assert fs.recovery[0].lost_offers < fs_naive.recovery[0].lost_offers
+    # the breaker-less losses all resurface as device-only degrades
+    assert fs_naive.total_degraded == fs_naive.recovery[0].lost_offers
+
+
+def test_dead_cell_run_same_seed_deterministic():
+    rt = workload.build_runtime(_dead_cell_spec(), _profile(), _cfg(0.060))
+    ev_a, ev_b = [], []
+    fs_a = simcore.simulate(rt, record=ev_a)
+    fs_b = simcore.simulate(rt, record=ev_b)
+    assert any(kind == "fault" for _, kind, _ in ev_a)
+    assert ev_a == ev_b
+    _assert_fleet_stats_identical(fs_a, fs_b)
+    _assert_region_stats_identical(fs_a, fs_b)
