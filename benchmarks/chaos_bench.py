@@ -25,6 +25,15 @@ exact completed/dropped counts (the simulator is seeded and deterministic),
 recovery-time ratio tolerance, a violation-during-outage budget, and the
 structural claim that recovery beats naive on violation-during-outage.
 
+The recovery cell also runs under full-sampling telemetry
+(``repro.serving.telemetry``) and exports the outage as a Chrome
+trace-event file (``--trace-out``, default ``BENCH_chaos_trace.json``,
+uploaded as a CI artifact — open it at ui.perfetto.dev to see the fault
+episode, breaker open/close, spillover reroutes, and retry backoffs). The
+cell's ``telemetry`` block pins the span/frame reconciliation
+(``reconcile.ok`` — the ``unaccounted_frames == 0`` discipline extended to
+telemetry) and the span-kind counts the gate checks for fault visibility.
+
   PYTHONPATH=src python benchmarks/chaos_bench.py --out BENCH_fleet_scale.json
 
 The scenario is already smoke-sized (<1 s of simulation past the one-time
@@ -33,6 +42,7 @@ profile fit), so CI and local runs execute the identical cells.
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import os
 import time
@@ -43,7 +53,7 @@ except ModuleNotFoundError:
     from benchmarks import common
 
 from repro.core import engine  # noqa: E402
-from repro.serving import faults, workload  # noqa: E402
+from repro.serving import faults, telemetry, workload  # noqa: E402
 
 N_STREAMS = 96
 FRAMES = 20
@@ -86,15 +96,21 @@ def scenario_spec(fault_spec: faults.FaultSpec) -> workload.WorkloadSpec:
         name="chaos")
 
 
-def bench_cell(profile, policy: str) -> dict:
+def bench_cell(profile, policy: str, trace_out: str | None = None) -> dict:
     spec = scenario_spec(POLICIES[policy])
     cfg = engine.EngineConfig(sla_s=SLA_MS / 1e3,
                               include_scheduler_overhead=False)
     rt = workload.build_runtime(spec, profile, cfg)
+    tel = None
+    if trace_out:
+        # full sampling so the exported outage trace shows every stream and
+        # the frame-span count reconciles exactly with FleetStats
+        tel = telemetry.Telemetry(telemetry.TelemetryConfig(
+            stream_sample=1, frame_sample=1))
     t0 = time.perf_counter()
-    fs = rt.run()
+    fs = rt.run(telemetry=tel)
     wall_s = time.perf_counter() - t0
-    return {
+    cell = {
         "policy": policy,
         "streams": N_STREAMS,
         "frames_per_stream": FRAMES,
@@ -121,13 +137,23 @@ def bench_cell(profile, policy: str) -> dict:
         "wall_s": wall_s,
         "wall_budget_s": WALL_BUDGET_S,
     }
+    if tel is not None:
+        tel.write_chrome_trace(trace_out)
+        kinds = collections.Counter(s[4] for s in tel.spans)
+        cell["telemetry"] = {
+            "trace_file": os.path.basename(trace_out),
+            "reconcile": tel.reconcile(fs),
+            "span_kinds": dict(sorted(kinds.items())),
+        }
+    return cell
 
 
-def run_cells() -> list[dict]:
+def run_cells(trace_out: str | None = None) -> list[dict]:
     profile = common.paper_profile()
     cells = []
     for policy in POLICIES:
-        c = bench_cell(profile, policy)
+        c = bench_cell(profile, policy,
+                       trace_out=trace_out if policy == "recovery" else None)
         cells.append(c)
         print(f"chaos {policy:9s} frames={c['completed_frames']:5d} "
               f"dropped={c['dropped']:3d} unacct={c['unaccounted_frames']} "
@@ -154,9 +180,13 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_fleet_scale.json",
                     help="artifact to merge the 'chaos' section into "
                          "(existing fleet-scale rows are preserved)")
+    ap.add_argument("--trace-out", default="BENCH_chaos_trace.json",
+                    help="Chrome trace-event export of the recovery cell "
+                         "(full sampling; open at ui.perfetto.dev); "
+                         "'' disables")
     args = ap.parse_args(argv)
 
-    cells = run_cells()
+    cells = run_cells(trace_out=args.trace_out or None)
     artifact = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
@@ -175,6 +205,9 @@ def main(argv=None):
         json.dump(artifact, f, indent=2)
     print(f"[chaos_bench] wrote {len(cells)} cells -> {args.out} "
           f"(section 'chaos')")
+    if args.trace_out:
+        print(f"[chaos_bench] recovery-cell Chrome trace -> "
+              f"{args.trace_out} (open at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

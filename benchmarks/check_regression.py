@@ -37,6 +37,17 @@ against the baselines committed under ``benchmarks/baselines/`` and fails
     violation-during-outage budget, and the structural claim that the
     recovery policy beats naive no-retry on violation-during-outage under
     the identical fault trace.
+  * **telemetry overhead** (``telemetry_overhead`` section,
+    ``benchmarks/fleet_scale_bench.py``): the default-sampling recorder's
+    wall ratio vs telemetry-off on the same cell must stay within the
+    recorder's published budget (``telemetry.OVERHEAD_BUDGET_RATIO``,
+    1.3x — an *absolute* contract, not a baseline ratio), the recorder
+    must be a pure observer (identical completed-frame counts on vs off),
+    and the off-cell frame count must match baseline exactly. The chaos
+    recovery cell's ``telemetry`` block is also gated: span/frame
+    reconciliation (``reconcile.ok``) and the fault spans the trace must
+    make visible (outage, breaker open, retries, spillover reroutes,
+    mid-flight losses).
   * **structural gates** (claims the artifact must keep making at the
     baseline-pinned fleet sizes): the priority-vs-FIFO cell keeps the
     interactive class's violation ratio strictly below FIFO at equal load;
@@ -215,6 +226,42 @@ def check_region_frontier(gate: Gate, fresh: dict, base: dict | None,
                    + "<".join(str(c["capacity"]) for c in cells))
 
 
+# ----------------------------------------------------- telemetry overhead
+
+def check_telemetry_overhead(gate: Gate, fresh: dict, base: dict | None):
+    """Gates on the ``telemetry_overhead`` section: the overhead ratio is
+    an absolute contract against the budget the row embeds (the recorder's
+    published ``OVERHEAD_BUDGET_RATIO``), purity is exact (telemetry must
+    not change what the simulator computes), and the telemetry-off frame
+    count must match the committed baseline exactly."""
+    rows = fresh.get("telemetry_overhead", [])
+    if not rows:
+        print("[check_regression] note: no telemetry_overhead section in "
+              "fleet-scale artifact; skipping telemetry gates")
+        return
+    base_rows = {} if base is None else \
+        {(r["scenario"], r["streams"]): r
+         for r in base.get("telemetry_overhead", [])}
+    for r in rows:
+        cell = f"telemetry [{r['scenario']} N={r['streams']}]"
+        gate.check(r["overhead_ratio"] <= r["budget_ratio"],
+                   f"{cell} overhead budget",
+                   f"on/off wall x{r['overhead_ratio']:.3f} <= "
+                   f"x{r['budget_ratio']:g} "
+                   f"(off={r['wall_off_s']:.2f}s on={r['wall_on_s']:.2f}s)")
+        gate.check(r["completed_frames_on"] == r["completed_frames_off"],
+                   f"{cell} pure observer",
+                   f"frames on={r['completed_frames_on']} == "
+                   f"off={r['completed_frames_off']}")
+        b = base_rows.get((r["scenario"], r["streams"]))
+        if b is None or b["frames_per_stream"] != r["frames_per_stream"]:
+            continue
+        gate.check(r["completed_frames_off"] == b["completed_frames_off"],
+                   f"{cell} completed frames",
+                   f"{r['completed_frames_off']} == "
+                   f"{b['completed_frames_off']}")
+
+
 # ------------------------------------------------------------------ chaos
 
 def check_chaos(gate: Gate, fresh: dict, base: dict | None,
@@ -249,6 +296,28 @@ def check_chaos(gate: Gate, fresh: dict, base: dict | None,
         gate.check(c["unaccounted_frames"] == 0,
                    f"{cell} frame conservation",
                    f"unaccounted_frames={c['unaccounted_frames']}")
+        tl = c.get("telemetry")
+        if policy == "recovery":
+            gate.check(tl is not None, f"{cell} telemetry trace recorded",
+                       "full-sampling recovery cell exports the outage "
+                       "trace" if tl is not None else
+                       "missing 'telemetry' block (ran without "
+                       "--trace-out?)")
+        if tl is not None:
+            rc = tl["reconcile"]
+            gate.check(bool(rc["ok"]), f"{cell} telemetry reconciles",
+                       f"frames {rc['frames_finished']}=="
+                       f"{rc['fleet_frames']} "
+                       f"frame_spans={rc['frame_spans']} "
+                       f"open_offers={rc['open_offers']} "
+                       f"open_cloud={rc['open_cloud']}")
+            kinds = tl.get("span_kinds", {})
+            needed = ("region-outage", "breaker->open", "breaker->closed",
+                      "retry-backoff", "enqueue", "cloud-lost")
+            missing = [k for k in needed if not kinds.get(k)]
+            gate.check(not missing, f"{cell} fault spans visible",
+                       f"missing {missing}" if missing else
+                       " ".join(f"{k}={kinds[k]}" for k in needed))
         b = base_cells.get(policy)
         if b is None or (b["streams"], b["frames_per_stream"]) != \
                 (c["streams"], c["frames_per_stream"]):
@@ -449,6 +518,7 @@ def main(argv=None) -> int:
                           args.ratio_tol, args.max_cell_wall_s)
         check_region_frontier(gate, fresh_fs, base_fs, args.ratio_tol)
         check_chaos(gate, fresh_fs, base_fs, args.time_tol, args.ratio_tol)
+        check_telemetry_overhead(gate, fresh_fs, base_fs)
     gate.check(fresh_p is not None and fresh_w is not None
                and fresh_fs is not None,
                "fresh artifacts present",

@@ -27,6 +27,13 @@ the 64k engines/traces are constructed once. Every cell embeds its own
 ``wall_budget_s``; the frontier claim (more capacity → no more violations
 within a (N, SLA) group) is gated structurally.
 
+A third sweep, ``telemetry_overhead``, runs the N=1024 cell of each
+scenario twice — telemetry off and with the default-sampling recorder
+(``repro.serving.telemetry``) attached — and records the best-of-3 wall
+ratio. The recorder is a pure observer (completed-frame counts must match
+exactly) and the ratio is gated at ``telemetry.OVERHEAD_BUDGET_RATIO``
+(1.3x) by ``check_regression.py``.
+
 ``BENCH_fleet_scale.json`` is gated by ``benchmarks/check_regression.py``
 against ``benchmarks/baselines/BENCH_fleet_scale.json``: per-cell
 wall-per-frame at a ratio tolerance, absolute per-cell wall budgets (the
@@ -40,6 +47,7 @@ deterministic).
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import time
 
@@ -49,10 +57,17 @@ except ModuleNotFoundError:
     from benchmarks import common
 
 from repro.core import engine  # noqa: E402
-from repro.serving import fleet, workload  # noqa: E402
+from repro.serving import fleet, telemetry, workload  # noqa: E402
 
 SCENARIOS = ("closed", "poisson")
 STREAMS = (64, 256, 1024, 4096)
+
+# telemetry_overhead sweep: default-sampling recorder vs telemetry-off on
+# the same cell, best-of-K walls; the ratio is gated against the recorder's
+# published budget (telemetry.OVERHEAD_BUDGET_RATIO)
+OVERHEAD_STREAMS = 1024
+OVERHEAD_STREAMS_SMOKE = 256
+OVERHEAD_REPS = 4
 
 # region_frontier sweep: 3 asymmetric cells, capacity x SLA x load grid
 REGION_WEIGHTS = (0.5, 0.3, 0.2)
@@ -187,6 +202,53 @@ def bench_region_frontier(profile, cells, seed: int) -> list[dict]:
     return rows
 
 
+def bench_telemetry_overhead(profile, n_streams: int, frames: int,
+                             sla_s: float, seed: int) -> list[dict]:
+    """Per scenario: the same cell with telemetry off and with the
+    default-sampling recorder attached, best-of-``OVERHEAD_REPS`` walls.
+    Telemetry is a pure observer, so completed-frame counts must match
+    exactly; the wall ratio is gated at the recorder's published budget."""
+    rows = []
+    for scenario in SCENARIOS:
+        spec = scenario_spec(scenario, n_streams, frames, seed)
+        cfg = engine.EngineConfig(sla_s=sla_s,
+                                  include_scheduler_overhead=False)
+        walls = {"off": float("inf"), "on": float("inf")}
+        completed = {}
+        # interleave the modes so machine-load drift across the reps hits
+        # both sides of the ratio equally
+        for _ in range(OVERHEAD_REPS):
+            for mode in ("off", "on"):
+                rt = workload.build_runtime(spec, profile, cfg)
+                tel = None if mode == "off" else telemetry.Telemetry()
+                # drain garbage left by earlier (much larger) sweeps so a
+                # stray full collection doesn't land inside one timed rep
+                # and skew the on/off ratio
+                gc.collect()
+                t0 = time.perf_counter()
+                fs = rt.run(telemetry=tel)
+                walls[mode] = min(walls[mode],
+                                  time.perf_counter() - t0)
+                completed[mode] = len(fs.all_frames)
+        row = {
+            "scenario": scenario,
+            "streams": n_streams,
+            "frames_per_stream": frames,
+            "completed_frames_off": completed["off"],
+            "completed_frames_on": completed["on"],
+            "wall_off_s": walls["off"],
+            "wall_on_s": walls["on"],
+            "overhead_ratio": walls["on"] / walls["off"],
+            "budget_ratio": telemetry.OVERHEAD_BUDGET_RATIO,
+        }
+        rows.append(row)
+        print(f"telemetry {scenario:8s} N={n_streams:5d} "
+              f"off={walls['off']:6.2f}s on={walls['on']:6.2f}s "
+              f"ratio={row['overhead_ratio']:.3f} "
+              f"(budget {row['budget_ratio']:.2f})")
+    return rows
+
+
 def rows():
     """``benchmarks/run.py`` hook: one CSV row per scenario at N=256, plus
     the smoke-size region-frontier cells."""
@@ -221,8 +283,14 @@ def main(argv=None):
 
     streams = [n for n in args.streams if n <= 256] if args.smoke \
         else args.streams
-    bench_rows = run_sweep(streams, args.frames, args.sla_ms, args.seed)
     profile = common.paper_profile()
+    # overhead cells run FIRST: the 16k/64k frontier sweeps below leave the
+    # process heap huge, which slows allocation-heavy code and would skew
+    # the on/off ratio by run order rather than by recorder cost
+    overhead_n = OVERHEAD_STREAMS_SMOKE if args.smoke else OVERHEAD_STREAMS
+    overhead_rows = bench_telemetry_overhead(
+        profile, overhead_n, args.frames, args.sla_ms / 1e3, args.seed)
+    bench_rows = run_sweep(streams, args.frames, args.sla_ms, args.seed)
     frontier_cells = FRONTIER_CELLS_SMOKE if args.smoke else FRONTIER_CELLS
     frontier_rows = bench_region_frontier(profile, frontier_cells, args.seed)
     artifact = {
@@ -232,6 +300,7 @@ def main(argv=None):
                    "smoke": args.smoke},
         "rows": bench_rows,
         "region_frontier": frontier_rows,
+        "telemetry_overhead": overhead_rows,
     }
     with open(args.out, "w") as f:
         json.dump(artifact, f, indent=2)

@@ -55,6 +55,15 @@ open), and graceful degradation to device-only execution. A
 trips, and violation-during-outage vs steady-state. See
 ``benchmarks/chaos_bench.py`` for the gated recovery-vs-naive comparison.
 
+Telemetry (fleet mode, ``repro.serving.telemetry``): every run records
+windowed metrics (exact per-window counters and p50/p99; the ``[fleet
+windows]`` block) plus sampled span traces and planner decision logs.
+``--trace-out trace.json`` exports a Chrome trace-event file (open at
+ui.perfetto.dev), ``--trace-out feed.jsonl`` the raw span/decision feed,
+``--metrics-out m.json`` the windowed metrics; ``--telemetry-sample K``
+tunes the 1-in-K stream sampling (0 turns the recorder off — the simulation
+is bit-identical either way). See ``docs/observability.md``.
+
 Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
 Algorithm-1 loop for comparison), and ``--streams N --execute`` runs the real
@@ -76,6 +85,7 @@ from repro.models import vit as vit_lib
 from repro.serving import faults as faults_lib
 from repro.serving import fleet as fleet_lib
 from repro.serving import sla as sla_lib
+from repro.serving import telemetry as telemetry_lib
 from repro.serving import workload as workload_lib
 
 
@@ -181,8 +191,12 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
     rt = workload_lib.build_runtime(spec, profile, eng_cfg,
                                     model_cfg=model_cfg, params=params)
     cloud = rt.cloud
+    tel = None
+    if args.telemetry_sample > 0:
+        tel = telemetry_lib.Telemetry(telemetry_lib.TelemetryConfig(
+            stream_sample=args.telemetry_sample))
     t0 = time.perf_counter()
-    fs = rt.run(images=images)
+    fs = rt.run(images=images, telemetry=tel)
     sim_wall = time.perf_counter() - t0
 
     print(f"[fleet] workload={spec.name} streams={spec.n_streams} "
@@ -228,7 +242,7 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
               f"final={fs.final_capacity} "
               f"capacity_seconds={fs.capacity_seconds:.2f} "
               f"changes={len(fs.capacity_timeline) - 1}")
-    if len(fs.per_region) > 1:
+    if fs.per_region:
         print(f"[fleet regions] cells={len(fs.per_region)} "
               f"spill%={100*fs.spill_ratio:.1f} "
               f"spill_slack={rt.spill_slack_s*1e3:.0f}ms")
@@ -253,6 +267,26 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
                   f"trips={rec.breaker_trips} "
                   f"open={rec.breaker_open_s:5.2f}s "
                   f"mttr={rec.mean_time_to_recover_s*1e3:7.1f}ms")
+    if tel is not None:
+        print(telemetry_lib.format_window_summary(tel))
+        rec = tel.reconcile(fs)
+        print(f"[fleet telemetry] sample=1/{args.telemetry_sample} "
+              f"spans={tel.spans_total} frame_spans={tel.frame_spans} "
+              f"decisions={tel.decisions_total} "
+              f"reconcile={'ok' if rec['ok'] else 'MISMATCH ' + repr(rec)}")
+        if args.trace_out:
+            if args.trace_out.endswith(".jsonl"):
+                tel.write_jsonl(args.trace_out)
+                print(f"[fleet telemetry] raw span/decision feed -> "
+                      f"{args.trace_out}")
+            else:
+                tel.write_chrome_trace(args.trace_out)
+                print(f"[fleet telemetry] Chrome trace (open in Perfetto) "
+                      f"-> {args.trace_out}")
+        if args.metrics_out:
+            tel.write_metrics(args.metrics_out)
+            print(f"[fleet telemetry] windowed metrics -> "
+                  f"{args.metrics_out}")
     return fs
 
 
@@ -361,6 +395,19 @@ def main(argv=None):
                          "half-open probe")
     ap.add_argument("--no-fault-breaker", action="store_true",
                     help="disable per-region circuit breakers")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="fleet mode: write the telemetry span trace; a "
+                         ".jsonl suffix writes the raw span/decision feed, "
+                         "anything else a Chrome trace-event JSON loadable "
+                         "in Perfetto (ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="fleet mode: write windowed metrics (per ~1s of "
+                         "sim time: queue depth, utilization, spill ratio, "
+                         "exact p50/p99 per region and SLA class) as JSON")
+    ap.add_argument("--telemetry-sample", type=int, default=16,
+                    help="record spans/decisions for every K-th stream "
+                         "(counters stay exact regardless; 0 disables "
+                         "telemetry entirely, 1 records every stream)")
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
@@ -379,6 +426,8 @@ def main(argv=None):
             ("--regions", args.regions > 1 or bool(args.region_rtt_ms)),
             ("--fault-*", bool(args.fault_outage or args.fault_crash
                                or args.fault_blackout)),
+            ("--trace-out", bool(args.trace_out)),
+            ("--metrics-out", bool(args.metrics_out)),
         ] if used]
         if fleet_only:
             ap.error(f"{' '.join(fleet_only)} only work in fleet mode "

@@ -700,14 +700,18 @@ class FleetRuntime:
         ]
         self._execute = base_cfg.execute and params is not None
 
-    def run(self, images=None) -> FleetStats:
+    def run(self, images=None, telemetry=None) -> FleetStats:
         """Run the fleet on the event-heap simulator core
         (``repro.serving.simcore``): identical semantics to the retired
         per-frame loop (kept below as ``run_reference``), with planner
         decisions batched per (tier, profile) group so simulation cost
-        scales with events, not frames x Python overhead."""
+        scales with events, not frames x Python overhead. ``telemetry``
+        takes an optional ``telemetry.Telemetry`` recorder (span traces,
+        windowed metrics, decision logs); ``None`` — the default — runs
+        the instrumentation-free hot path, bit-exact with pre-telemetry
+        builds."""
         from repro.serving import simcore
-        return simcore.simulate(self, images=images)
+        return simcore.simulate(self, images=images, telemetry=telemetry)
 
     def run_reference(self, images=None) -> FleetStats:
         """The retired per-frame event loop, kept verbatim as the parity

@@ -363,6 +363,19 @@ class _Pipe:
             self.valid = self.pos + 1
             self.chunk = max(_CHUNK_MIN, self.chunk // 2)
 
+    def current_estimate(self) -> float:
+        """The committed harmonic-mean estimate the next decision sees —
+        read-only (``take`` commits the observation *after* the decision),
+        so this is bit-equal to the speculated batched estimate. Telemetry's
+        decision log reads it; the hot path never calls it."""
+        win = self.window
+        if win:
+            s = 0.0
+            for v in win:
+                s += 1.0 / v
+            return len(win) / s
+        return self.cold
+
     def take(self, fi: int):
         """Consume the next decision for admitted frame ``fi``. Returns
         ``(dev_s, comm_s, cloud_s, overhead_s, alpha, split, accuracy,
@@ -542,12 +555,19 @@ def _merge_timelines(tls: list[list[tuple[float, int]]]) \
     return merged
 
 
-def simulate(rt, images=None, record: list | None = None):
+def simulate(rt, images=None, record: list | None = None, telemetry=None):
     """Run ``rt`` (a ``fleet.FleetRuntime``) through the event-heap core and
     return its ``FleetStats``. ``record``, if given, collects every popped
     event as ``(time, kind, payload)`` — the determinism test asserts two
-    seeded runs produce identical event sequences."""
+    seeded runs produce identical event sequences. ``telemetry``, if given,
+    is a ``telemetry.Telemetry`` recorder whose hooks observe the heap loop
+    (spans, windowed metrics, decision logs); every call site is guarded so
+    ``telemetry=None`` runs today's exact instruction stream — the recorder
+    must never change a simulated float (``tests/test_telemetry.py`` pins
+    both directions)."""
     from repro.serving.fleet import Autoscaler, FleetStats, RegionStats
+
+    tel = telemetry
 
     streams, cloud = rt.streams, rt.cloud
     n_streams = len(streams)
@@ -620,6 +640,25 @@ def simulate(rt, images=None, record: list | None = None):
         [[] for _ in rt.regions]
     cap_timelines: list[list[tuple[float, int]]] = \
         [[(0.0, c)] for c in caps0]
+    if tel is not None:
+        tel.bind(region_names=[reg.name for reg in rt.regions], caps=caps0,
+                 stream_regions=home_of,
+                 stream_classes=[s.sla_class for s in streams])
+        # hot-path hooks bound once (the guarded call sites below pay one
+        # identity check + one call, no attribute chase, per frame)
+        tel_planned, tel_enqueued = tel.frame_planned, tel.enqueued
+        tel_finished, tel_dispatched = tel.frame_finished, \
+            tel.batch_dispatched
+        tel_sampled, tel_fsamp, tel_dec = tel.sampling()
+        # per-frame exact counters push bare scalars into flat arrays
+        # (bucketed vectorized at finalize) — the cheapest possible
+        # hot-path hook, and allocation-free so GC cadence stays put
+        tel_fin, tel_off, tel_enq = tel.sinks()
+    else:
+        tel_planned = tel_sampled = tel_enqueued = None
+        tel_finished = tel_dispatched = None
+        tel_fin = tel_off = tel_enq = None
+        tel_fsamp, tel_dec = 1, False
     seq = itertools.count()
     events: list = []                # (time, seq, kind, payload)
     state = {"horizon": 0.0,
@@ -638,16 +677,26 @@ def simulate(rt, images=None, record: list | None = None):
             state["remaining"] -= 1
             if pipes[si] is not None:
                 pipes[si].on_drop()
+            if tel is not None:
+                tel.frame_dropped(si, t0)
             return
         inflight[si] += 1
         plan_frame(si, fi, t0)
 
     def plan_frame(si: int, fi: int, t0: float) -> None:
         pipe = pipes[si]
+        est_pre = None
+        if tel_dec and tel_sampled[si] and fi % tel_fsamp == 0:
+            # the committed estimate the decision is about to use, read
+            # before take() commits this frame's observation
+            est_pre = pipe.current_estimate() if pipe is not None \
+                else estimators[si].estimate()
         if pipe is not None:
             if fm is not None and fm.blacked_out(si, t0):
                 (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
                  b_true) = pipe.take_dead(fi)
+                if est_pre is not None:
+                    est_pre = 0.0   # dead link: the planner saw 0 bandwidth
             else:
                 (dev_s, comm_s, cloud_s, ov, alpha, split, acc, payload,
                  b_true) = pipe.take(fi)
@@ -672,6 +721,19 @@ def simulate(rt, images=None, record: list | None = None):
                      acc, payload, b_true))
         if engine_mode:
             exec_plans.append(plan)
+        if tel_planned is not None and tel_sampled[si] \
+                and fi % tel_fsamp == 0:
+            tel_planned(si, fi, t0, dev_start, ov, dev_s, comm_s,
+                        alpha, split)
+            if est_pre is not None:
+                tel.log_decision(
+                    si, fi, t0, home_of[si], alpha, split, est_pre,
+                    sla_eff[si] - (dev_start - t0 + ov + dev_s + comm_s
+                                   + cloud_s),
+                    pipe.acct if pipe is not None
+                    and pipe.kind == _TABLES else None,
+                    pipe.rtt if pipe is not None
+                    else float(streams[si].trace.rtt_s))
         if cloud_s <= 0.0:            # device-only: never touches the cloud
             push(local_done, FINISH, rid if fm is None else (rid, -1))
         else:
@@ -693,6 +755,9 @@ def simulate(rt, images=None, record: list | None = None):
         rec = recs[rid]
         home = home_of[rec[0]]
         offered[home] += 1
+        if tel_off is not None:
+            tel_off(home)
+            tel_off(now)
         if fm is not None:
             route(rid, home, now, retry=False)
             return
@@ -708,9 +773,13 @@ def simulate(rt, images=None, record: list | None = None):
                     best, best_cost = r, cost
             if best != home:
                 spilled[home] += 1
+                if tel is not None:
+                    tel.spilled(home, now)
                 delta = max(0.0, off[best] - off[home])
                 if delta > 0.0:
                     # the detour's extra round-trip precedes batcher entry
+                    if tel is not None:
+                        tel.enqueue_delay(rid, rec[0], rec[1], now, delta)
                     push(now + delta, ENQUEUE, (rid, best))
                     return
                 enqueue(rid, best, now)
@@ -742,11 +811,20 @@ def simulate(rt, images=None, record: list | None = None):
             return
         if target != home and not retry:
             spilled[home] += 1
+            if tel is not None:
+                tel.spilled(home, now)
         fm.note_route(rid, target, now)
+        if tel is not None:
+            br = fm.breakers[target]
+            if br is not None:   # note_route may have probed open→half_open
+                tel.breaker_state(target, now, br.state)
         delta = max(0.0, off[target] - off[home])
         if retry:
             delta += recs[rid][4]     # the resend pays the uplink again
         if delta > 0.0:
+            if tel is not None:
+                tel.enqueue_delay(rid, recs[rid][0], recs[rid][1], now,
+                                  delta)
             push(now + delta, ENQUEUE, (rid, target))
         else:
             enqueue(rid, target, now)
@@ -764,6 +842,14 @@ def simulate(rt, images=None, record: list | None = None):
         micro = micros[r]
         req = Request(rid, arrival_s=now, sla_class=streams[si].sla_class,
                       deadline_s=rec[2] + sla_eff[si])
+        if tel_enq is not None:
+            # depth includes this frame (offer below may flush the batch)
+            depth = micro.pending_count + 1
+            tel_enq(r)
+            tel_enq(now)
+            tel_enq(depth)
+            if tel_sampled[si] and rec[1] % tel_fsamp == 0:
+                tel_enqueued(rid, si, rec[1], r, now, depth)
         batch = micro.offer(req, now)
         if batch is not None:
             dispatch(r, batch, now)
@@ -805,6 +891,8 @@ def simulate(rt, images=None, record: list | None = None):
         region_batches[r] += 1
         served[r] += len(batch)
         done = start + service
+        if tel_dispatched is not None:
+            tel_dispatched(r, start, service, members)
         if fm is not None:
             # FINISH carries (rid, batch-token): a later kill voids the
             # token, so stale completions of dead batches are discarded even
@@ -832,6 +920,8 @@ def simulate(rt, images=None, record: list | None = None):
                 br = fm.breakers[r]
                 if br is not None:
                     br.record_success(tf)
+                    if tel is not None:
+                        tel.breaker_state(r, tf, br.state)
                 t_up = fm.awaiting_recovery[r]
                 if t_up is not None and tf >= t_up:
                     # first cloud completion after the cell came back
@@ -842,6 +932,11 @@ def simulate(rt, images=None, record: list | None = None):
             o = fm.override.pop(rid, None)
             if o is not None:   # degraded: report the device-only rerun
                 dev_s, comm_s, cloud_s, alpha, split, acc = o
+                degraded = True
+            else:
+                degraded = False
+        else:
+            degraded = False
         total_s = dev_s + comm_s + cloud_s
         standalone = total_s + ov
         queue_s = tf - t0 - standalone
@@ -859,6 +954,15 @@ def simulate(rt, images=None, record: list | None = None):
         inflight[si] -= 1
         if fm is not None:
             fm.note_frame(home_of[si], si, t0, tf, lat > sla)
+        if tel_fin is not None:
+            violated = lat > sla
+            tel_fin(si)
+            tel_fin(tf)
+            tel_fin(lat)
+            tel_fin(violated)
+            if tel_sampled[si] and fi % tel_fsamp == 0:
+                tel_finished(si, fi, rid, t0, tf, lat, violated, queue_s,
+                             alpha, split, degraded)
         spec = streams[si]
         if spec.arrival_times is None and fi + 1 < spec.n_frames:
             arrive(si, fi + 1, max(tf, t0 + spec.period_s))
@@ -871,6 +975,8 @@ def simulate(rt, images=None, record: list | None = None):
             heapq.heappop(ex)
         caps[r] = newc
         cap_timelines[r].append((now, newc))
+        if tel is not None:
+            tel.capacity_changed(r, now, newc)
 
     def control(r: int, now: float) -> None:
         scaler = scalers[r]
@@ -897,6 +1003,8 @@ def simulate(rt, images=None, record: list | None = None):
             service_intervals[r][:] = keep
             util = busy_w / (caps[r] * window)
             newc = scaler.decide(now, util, caps[r])
+        if tel is not None and newc != caps[r]:
+            tel.autoscale(r, now, caps[r], newc)
         set_capacity(r, newc, now)
         if state["remaining"] > 0:
             push(now + window, CONTROL, r)
@@ -911,11 +1019,20 @@ def simulate(rt, images=None, record: list | None = None):
             br = fm.breakers[r]
             if br is not None:
                 br.record_failure(now)
+                if tel is not None:
+                    tel.breaker_state(r, now, br.state)
+        if tel is not None:
+            tel.offer_lost(rid, recs[rid][0], r, now)
         attempts = fm.attempts.get(rid, 0) + 1
         fm.attempts[rid] = attempts
         if attempts <= fm.retry.max_retries:
-            fm.retries[home_of[recs[rid][0]]] += 1
-            push(now + fm.retry.backoff_s(attempts), RETRY, rid)
+            home = home_of[recs[rid][0]]
+            fm.retries[home] += 1
+            backoff = fm.retry.backoff_s(attempts)
+            if tel is not None:
+                tel.retry_scheduled(rid, recs[rid][0], recs[rid][1], home,
+                                    now, backoff, attempts)
+            push(now + backoff, RETRY, rid)
         else:
             degrade(rid, now)
 
@@ -961,6 +1078,9 @@ def simulate(rt, images=None, record: list | None = None):
         fm.pending_region.pop(rid, None)
         start = max(now, device_free[si])
         device_free[si] = start + dev_s
+        if tel is not None:
+            tel.degraded_run(rid, si, recs[rid][1], home_of[si], start,
+                             dev_s)
         push(device_free[si], FINISH, (rid, -1))
 
     def kill_batch(r: int, bid: int, now: float) -> None:
@@ -970,6 +1090,8 @@ def simulate(rt, images=None, record: list | None = None):
         served[r] -= len(members)
         busy[r] -= max(0.0, done - now)   # the executor stopped burning time
         fm.lost_inflight[r] += len(members)
+        if tel is not None:
+            tel.batch_killed(r, now, len(members))
         for rid in members:
             fm.batch_of.pop(rid, None)
             on_loss(rid, now)
@@ -983,6 +1105,8 @@ def simulate(rt, images=None, record: list | None = None):
             if not live:
                 return
             done, bid = min(live)
+            if tel is not None:
+                tel.executor_crash(r, now)
             kill_batch(r, bid, now)
             ex = executors[r]
             if done in ex:              # free the dead batch's slot
@@ -994,6 +1118,8 @@ def simulate(rt, images=None, record: list | None = None):
             if fm.down[r]:
                 return                  # overlapping windows: already dark
             fm.down[r] = True
+            if tel is not None:
+                tel.outage_started(r, now)
             fm.outages[r] += 1
             fm.outage_s[r] += ep.duration_s
             fm.saved_cap[r] = caps[r]
@@ -1009,11 +1135,16 @@ def simulate(rt, images=None, record: list | None = None):
                 on_loss(req.rid, now)
             caps[r] = 0
             cap_timelines[r].append((now, 0))
+            if tel is not None:
+                tel.capacity_changed(r, now, 0)
         else:
             fm.down[r] = False
             caps[r] = fm.saved_cap[r]
             cap_timelines[r].append((now, caps[r]))
             fm.awaiting_recovery[r] = now
+            if tel is not None:
+                tel.outage_ended(r, now)
+                tel.capacity_changed(r, now, caps[r])
 
     for si, spec in enumerate(streams):
         if spec.arrival_times is None:
@@ -1063,6 +1194,8 @@ def simulate(rt, images=None, record: list | None = None):
         for r in pending:
             dispatch(r, micros[r].flush(), state["horizon"])
 
+    if tel is not None:
+        tel.finalize(state["horizon"])
     per_stream = [RunStats([
         FrameResult(latency_s=float(lat), violated=bool(vio),
                     deviation=float(dev), alpha=float(alpha), split=int(spl),

@@ -1,0 +1,220 @@
+"""Fleet telemetry (repro.serving.telemetry over simcore): the pure-observer
+contract (telemetry attached changes nothing, bit for bit), Chrome-trace
+export schema, exact windowed counters and percentiles vs brute-force
+recompute, sampling determinism, and span/frame reconciliation under fault
+injection — the ``unaccounted_frames == 0`` discipline extended to spans.
+"""
+import collections
+import json
+
+import numpy as np
+import pytest
+from conftest import small_model_profile as _profile
+from test_simcore import _assert_fleet_stats_identical, _cfg, _seed_scenario
+
+from repro.serving import telemetry, workload
+from repro.serving.telemetry import Telemetry, TelemetryConfig
+
+SCENARIOS = ["closed-loop", "poisson-overload", "mmpp-burst", "sla-mix"]
+
+
+def _full():
+    return Telemetry(TelemetryConfig(stream_sample=1, frame_sample=1))
+
+
+# ------------------------------------------------ pure-observer contract
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_telemetry_is_a_pure_observer(scenario):
+    """With the recorder attached at *full* sampling, every per-frame
+    outcome is bit-identical to the telemetry-off run and to the parity
+    oracle — and the recorder's own books reconcile against FleetStats."""
+    spec = _seed_scenario(scenario)
+    prof = _profile()
+    rt = workload.build_runtime(spec, prof, _cfg())
+    fs_off = rt.run()
+    _assert_fleet_stats_identical(fs_off, rt.run_reference())
+    tel = _full()
+    fs_on = workload.build_runtime(spec, prof, _cfg()).run(telemetry=tel)
+    _assert_fleet_stats_identical(fs_off, fs_on)
+    rec = tel.reconcile(fs_on)
+    assert rec["ok"], rec
+    assert rec["frame_spans"] == len(fs_on.all_frames)
+    assert rec["open_offers"] == 0 and rec["open_cloud"] == 0
+
+
+def test_sampled_run_keeps_counters_exact():
+    """Sampling only thins spans and decisions; the windowed counters and
+    latency reservoirs stay exact, so totals match the full-sampling run."""
+    spec = _seed_scenario("poisson-overload")
+    prof = _profile()
+    tel_full, tel_thin = _full(), Telemetry(TelemetryConfig(stream_sample=4,
+                                                            frame_sample=3))
+    fs_a = workload.build_runtime(spec, prof, _cfg()).run(telemetry=tel_full)
+    fs_b = workload.build_runtime(spec, prof, _cfg()).run(telemetry=tel_thin)
+    _assert_fleet_stats_identical(fs_a, fs_b)
+    ms_f, ms_t = tel_full.metrics_summary(), tel_thin.metrics_summary()
+    assert tel_thin.reconcile(fs_b)["ok"]
+    assert ms_t["totals"]["frames_finished"] == \
+        ms_f["totals"]["frames_finished"] == len(fs_a.all_frames)
+    for wf, wt in zip(ms_f["windows"], ms_t["windows"]):
+        for key in ("index", "offered", "finished", "violations", "drops",
+                    "spills", "per_class"):
+            assert wf[key] == wt[key], key
+        for rf, rtw in zip(wf["per_region"], wt["per_region"]):
+            assert rf["latency"] == rtw["latency"]
+            assert rf["offered"] == rtw["offered"]
+    assert tel_thin.frame_spans < tel_full.frame_spans
+
+
+# ------------------------------------------------ trace export schema
+
+def test_chrome_trace_schema_and_conservation():
+    spec = _seed_scenario("poisson-overload")
+    tel = _full()
+    fs = workload.build_runtime(spec, _profile(), _cfg()).run(telemetry=tel)
+    doc = tel.chrome_trace()
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    body = [e for e in events if e["ph"] != "M"]
+    # metadata names both processes and every region thread
+    names = {m["args"]["name"] for m in meta if m["name"] == "process_name"}
+    assert names == {"fleet regions", "streams (sampled)"}
+    # events are sorted by sim-time and every complete span has dur >= 0
+    ts = [e["ts"] for e in body]
+    assert ts == sorted(ts)
+    for e in body:
+        assert e["ph"] in ("X", "I", "C")
+        assert e["ts"] >= 0.0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    # frame-span count conserves the completed-frame count at full sampling
+    frames = [e for e in body if e["name"] == "frame"]
+    assert len(frames) == len(fs.all_frames)
+    assert doc["otherData"]["frame_spans"] == len(fs.all_frames)
+    assert doc["otherData"]["frames_dropped"] == fs.total_dropped
+    # the document round-trips through JSON (what write_chrome_trace emits)
+    json.loads(json.dumps(doc))
+
+
+def test_jsonl_feed_matches_span_and_decision_counts(tmp_path):
+    spec = _seed_scenario("sla-mix")
+    tel = _full()
+    workload.build_runtime(spec, _profile(), _cfg()).run(telemetry=tel)
+    path = tmp_path / "trace.jsonl"
+    tel.write_jsonl(str(path))
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    kinds = collections.Counter(r["kind"] for r in recs)
+    assert kinds["span"] == len(tel.spans) == tel.spans_total
+    assert kinds["decision"] == len(tel.decision_log())
+
+
+# ------------------------------------------------ windowed exactness
+
+def test_window_percentiles_exact_vs_brute_force():
+    """Feed the raw sinks a synthetic trace and recompute every window's
+    counters and percentiles with plain numpy: the summary must be exact
+    (no streaming sketches, no approximation)."""
+    tel = Telemetry(TelemetryConfig(window_s=1.0))
+    tel.bind(["r0", "r1"], [2, 2], [0, 1, 0, 1], ["std"] * 4)
+    fin, off, _enq = tel.sinks()
+    rng = np.random.default_rng(11)
+    n = 500
+    si = rng.integers(0, 4, n)
+    tf = rng.uniform(0.0, 5.0, n)
+    lat = rng.uniform(0.005, 0.400, n)
+    vio = lat > 0.3
+    for i in range(n):
+        for v in (si[i], tf[i], lat[i], vio[i]):
+            fin(v)
+        off(si[i] % 2)
+        off(tf[i])
+    tel.finalize(5.0)
+    ms = tel.metrics_summary()
+    region = np.asarray([0, 1, 0, 1])[si]
+    wi = tf.astype(np.int64)
+    assert ms["totals"]["frames_finished"] == n
+    for w in ms["windows"]:
+        m = wi == w["index"]
+        assert w["finished"] == int(m.sum())
+        assert w["violations"] == int(vio[m].sum())
+        for r, pr in enumerate(w["per_region"]):
+            sel = m & (region == r)
+            assert pr["finished"] == int(sel.sum())
+            assert pr["offered"] == int((m & (si % 2 == r)).sum())
+            lats = lat[sel]
+            if len(lats):
+                assert pr["latency"]["n"] == len(lats)
+                assert pr["latency"]["p50_ms"] == pytest.approx(
+                    float(np.percentile(lats, 50)) * 1e3, abs=1e-9)
+                assert pr["latency"]["p99_ms"] == pytest.approx(
+                    float(np.percentile(lats, 99)) * 1e3, abs=1e-9)
+            else:
+                assert pr["latency"]["n"] == 0
+
+
+def test_queue_depth_high_water_exact():
+    tel = Telemetry(TelemetryConfig(window_s=1.0))
+    tel.bind(["r0"], [1], [0], ["std"])
+    _, _, enq = tel.sinks()
+    depths = [(0.2, 3), (0.4, 7), (0.9, 5), (1.1, 2), (1.6, 9)]
+    for t, d in depths:
+        enq(0)
+        enq(t)
+        enq(d)
+    tel.finalize(2.0)
+    wins = {w["index"]: w for w in tel.metrics_summary()["windows"]}
+    assert wins[0]["per_region"][0]["queue_depth_max"] == 7
+    assert wins[1]["per_region"][0]["queue_depth_max"] == 9
+
+
+# ------------------------------------------------ sampling determinism
+
+def test_same_seed_same_telemetry():
+    """Two runs of the same seeded scenario with the same sampling knobs
+    produce identical spans, decisions, and metrics — the recorder adds no
+    nondeterminism of its own."""
+    spec = _seed_scenario("mmpp-burst")
+    prof = _profile()
+    cfgs = TelemetryConfig(stream_sample=2, frame_sample=2)
+    tel_a, tel_b = Telemetry(cfgs), Telemetry(cfgs)
+    fs_a = workload.build_runtime(spec, prof, _cfg()).run(telemetry=tel_a)
+    fs_b = workload.build_runtime(spec, prof, _cfg()).run(telemetry=tel_b)
+    _assert_fleet_stats_identical(fs_a, fs_b)
+    assert tel_a.spans == tel_b.spans
+    assert tel_a.decision_log() == tel_b.decision_log()
+    assert tel_a.metrics_summary() == tel_b.metrics_summary()
+
+
+# ------------------------------------------------ faults reconcile
+
+def test_fault_run_reconciles_and_shows_episode():
+    """A region outage under full sampling: the recorder's books still
+    reconcile exactly against FleetStats and the trace shows the fault
+    episode and recovery machinery as first-class spans."""
+    spec = _seed_scenario("poisson-overload")
+    faulted = workload.WorkloadSpec.from_dict(
+        {**spec.to_dict(),
+         "regions": [{"name": f"r{i}", "capacity": 1, "rtt_ms": 5.0 * i}
+                     for i in range(3)],
+         "faults": {"episodes": [{"kind": "region_outage", "start_s": 0.3,
+                                  "duration_s": 0.5, "region": 0}]}})
+    tel = _full()
+    rt = workload.build_runtime(faulted, _profile(), _cfg())
+    fs = rt.run(telemetry=tel)
+    assert fs.unaccounted_frames == 0
+    rec = tel.reconcile(fs)
+    assert rec["ok"], rec
+    kinds = collections.Counter(s[4] for s in tel.spans)
+    assert kinds["region-outage"] == 1
+    assert kinds["outage-start"] == 1
+    assert kinds["frame"] == len(fs.all_frames)
+
+
+def test_window_summary_renders():
+    spec = _seed_scenario("closed-loop")
+    tel = _full()
+    workload.build_runtime(spec, _profile(), _cfg()).run(telemetry=tel)
+    text = telemetry.format_window_summary(tel)
+    assert "[fleet windows]" in text
+    assert "p99" in text or "win" in text
