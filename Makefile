@@ -2,24 +2,27 @@
 #
 #   make test               fast tier (pytest -m "not slow"; the CI gate)
 #   make test-all           full tier-1 suite
-#   make lint               ruff over the whole repo
+#   make lint               ruff + docs link check (tools/check_links.py)
 #   make bench-planner      per-decision planner bench -> BENCH_planner.json
 #   make bench-workload     workload-scenario sweep smoke -> BENCH_workload.json
 #   make bench-fleet-scale  event-heap core at N<=4096 -> BENCH_fleet_scale.json
 #   make bench-chaos        fault-injection chaos bench -> chaos section of
 #                           BENCH_fleet_scale.json (run after bench-fleet-scale)
+#   make bench-execute      bucketed real-execution smoke -> BENCH_execute.json
 #   make check-regression   fresh BENCH artifacts vs benchmarks/baselines/
 #   make ci                 what .github/workflows/ci.yml runs
 #
 # After an intentional perf change, refresh the committed baselines:
 #   make bench-planner bench-workload bench-fleet-scale bench-chaos
-#   cp BENCH_planner.json BENCH_workload.json BENCH_fleet_scale.json benchmarks/baselines/
+#   python benchmarks/execute_bench.py --out BENCH_execute.json   # full, not smoke
+#   cp BENCH_planner.json BENCH_workload.json BENCH_fleet_scale.json \
+#      BENCH_execute.json benchmarks/baselines/
 
 PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-all lint bench-planner bench-workload bench-fleet-scale \
-	bench-chaos check-regression ci
+	bench-chaos bench-execute check-regression ci
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -33,6 +36,7 @@ lint:
 	else \
 		echo "ruff not installed; skipping lint (CI installs it)"; \
 	fi
+	python tools/check_links.py
 
 bench-planner:
 	python benchmarks/planner_bench.py --out BENCH_planner.json
@@ -46,8 +50,11 @@ bench-fleet-scale:
 bench-chaos:
 	python benchmarks/chaos_bench.py --out BENCH_fleet_scale.json
 
+bench-execute:
+	python benchmarks/execute_bench.py --smoke --out BENCH_execute.json
+
 check-regression:
 	python benchmarks/check_regression.py
 
 ci: lint test bench-planner bench-workload bench-fleet-scale bench-chaos \
-	check-regression
+	bench-execute check-regression

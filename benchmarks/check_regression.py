@@ -48,6 +48,15 @@ against the baselines committed under ``benchmarks/baselines/`` and fails
     reconciliation (``reconcile.ok``) and the fault spans the trace must
     make visible (outage, breaker open, retries, spillover reroutes,
     mid-flight losses).
+  * **real execution** (``BENCH_execute.json``,
+    ``benchmarks/execute_bench.py``): join-vs-stack logits parity for
+    every execution mode against the per-stream slow path (within the
+    artifact's embedded float tolerance), the continuous-batching claim —
+    every bucketed mode beats the per-stream path on episode frames/s at
+    a mixed-α fleet of N >= 16 streams — retrace bounds (bucketed cloud
+    compiles <= bucket-edge count and < the per-α compile count of the
+    exact paths), and per-mode episode wall at the wall-clock ratio
+    tolerance vs baseline.
   * **structural gates** (claims the artifact must keep making at the
     baseline-pinned fleet sizes): the priority-vs-FIFO cell keeps the
     interactive class's violation ratio strictly below FIFO at equal load;
@@ -352,6 +361,62 @@ def check_chaos(gate: Gate, fresh: dict, base: dict | None,
                    f"{rec['dropped']} <= {nai['dropped']}")
 
 
+# ---------------------------------------------------------------- execute
+
+def check_execute(gate: Gate, fresh: dict, base: dict | None,
+                  time_tol: float):
+    """Gates on ``BENCH_execute.json`` (``benchmarks/execute_bench.py``,
+    the real-execution continuous-batching bench): join-vs-stack parity
+    within the artifact's embedded ``parity_atol`` for every mode, every
+    bucketed mode beating the per-stream slow path on episode frames/s at
+    the bench's mixed-α fleet (N >= 16), bucketed cloud retraces bounded
+    by the bucket-edge count and strictly below the per-α retraces of the
+    exact paths, and per-mode episode wall vs baseline at the wall-clock
+    ratio tolerance."""
+    cfgf = fresh.get("config", {})
+    gate.check(cfgf.get("streams", 0) >= 16, "execute fleet size",
+               f"N={cfgf.get('streams')} >= 16 mixed-α streams")
+    gate.check(len(fresh.get("shared_suffixes", [])) == 1,
+               "execute shared schedule suffix",
+               f"suffixes={fresh.get('shared_suffixes')} (mixed α collapse "
+               "onto one cloud program family)")
+    atol = fresh.get("parity_atol", 2e-6)
+    modes = {r["mode"]: r for r in fresh.get("modes", [])}
+    per_stream = modes.get("per_stream")
+    gate.check(per_stream is not None, "execute per_stream mode present",
+               f"modes={sorted(modes)}")
+    base_modes = {} if base is None else \
+        {r["mode"]: r for r in base.get("modes", [])}
+    for name, r in modes.items():
+        cell = f"execute [{name}]"
+        gate.check(r["parity_max_abs_diff"] <= atol, f"{cell} parity",
+                   f"max|Δlogits|={r['parity_max_abs_diff']:.2e} <= "
+                   f"{atol:g} vs per-stream path")
+        if name.startswith("bucketed") and per_stream is not None:
+            gate.check(r["episode_frames_per_s"]
+                       > per_stream["episode_frames_per_s"],
+                       f"{cell} beats per-stream episode throughput",
+                       f"{r['episode_frames_per_s']:.1f} > "
+                       f"{per_stream['episode_frames_per_s']:.1f} frames/s")
+            padded = r["traces"].get("cloud_padded", 0)
+            gate.check(padded <= len(r["edges_at_split"]),
+                       f"{cell} retraces bounded by bucket edges",
+                       f"cloud_padded={padded} <= "
+                       f"{len(r['edges_at_split'])} edges at split")
+            exact = per_stream["traces"].get("cloud", 0)
+            gate.check(padded < exact,
+                       f"{cell} retraces below per-α compile count",
+                       f"cloud_padded={padded} < cloud={exact}")
+        b = base_modes.get(name)
+        if b is None or base.get("config", {}).get("streams") != \
+                cfgf.get("streams"):
+            continue
+        gate.check(r["episode_wall_s"] <= b["episode_wall_s"] * time_tol,
+                   f"{cell} episode wall",
+                   f"{r['episode_wall_s']:.2f}s vs baseline "
+                   f"{b['episode_wall_s']:.2f}s (tol x{time_tol:g})")
+
+
 # --------------------------------------------------------------- workload
 
 def _row_key(r: dict):
@@ -478,6 +543,8 @@ def main(argv=None) -> int:
                     help="fresh workload artifact")
     ap.add_argument("--fleet-scale", default="BENCH_fleet_scale.json",
                     help="fresh fleet-scale artifact")
+    ap.add_argument("--execute", default="BENCH_execute.json",
+                    help="fresh real-execution (bucketed batching) artifact")
     ap.add_argument("--baseline-dir", default="benchmarks/baselines",
                     help="directory with committed baseline artifacts")
     ap.add_argument("--max-cell-wall-s", type=float, default=45.0,
@@ -519,11 +586,16 @@ def main(argv=None) -> int:
         check_region_frontier(gate, fresh_fs, base_fs, args.ratio_tol)
         check_chaos(gate, fresh_fs, base_fs, args.time_tol, args.ratio_tol)
         check_telemetry_overhead(gate, fresh_fs, base_fs)
+
+    fresh_e = _load(args.execute, "fresh execute artifact")
+    base_e = _load(bdir / "BENCH_execute.json", "execute baseline")
+    if fresh_e is not None:
+        check_execute(gate, fresh_e, base_e, args.time_tol)
     gate.check(fresh_p is not None and fresh_w is not None
-               and fresh_fs is not None,
+               and fresh_fs is not None and fresh_e is not None,
                "fresh artifacts present",
                f"planner={args.planner} workload={args.workload} "
-               f"fleet_scale={args.fleet_scale}")
+               f"fleet_scale={args.fleet_scale} execute={args.execute}")
     return gate.report()
 
 

@@ -1,0 +1,224 @@
+"""Real-execution benchmark: continuous batching of the cloud partition
+under mixed pruning levels (``BENCH_execute.json``).
+
+A fleet of N streams (N >= 16) all split at the same layer while the
+per-frame scheduler hands each one a different pruning level α — the
+worst case for compiled-program reuse: every α reaches the cloud with a
+different token count, so the naive path compiles one cloud partition per
+α and dispatches them one by one. The bench measures three ways of
+executing the identical set of pending ``ExecPlan``s:
+
+  * ``per_stream``     — one ``run_cloud_batch`` call per plan (the slow
+                         path a fleet without micro-batching would take):
+                         one compiled geometry *and* one dispatch per
+                         distinct token count.
+  * ``stacked_exact``  — one call over all plans, no bucket table: plans
+                         batch only on exact (schedule, split, count)
+                         geometry, so mixed-α traffic still compiles one
+                         program per count but dispatches each stack once.
+  * ``bucketed_e{K}``  — one call with a ``BucketTable`` (n_edges=K):
+                         plans sharing the schedule *suffix* past the
+                         split are padded to a common bucket edge and
+                         share one compiled geometry; retraces are
+                         bounded by the edge count, not by |α|.
+
+The geometry is the validated 50-token ViT (img_res=56/patch=8, 6 layers)
+at split=4, where all eight α ∈ {0.2..0.9} share the cloud schedule
+suffix (1, 1) while entering with 8 distinct token counts — i.e. the
+saturating exponential schedule doing exactly what docs/execution.md
+describes.
+
+Each mode row records two throughputs over identical pending plans:
+
+  * ``episode_frames_per_s`` — a fresh-cache serving episode: the first
+    round compiles (that IS serving cost — under a dynamic network the
+    scheduler keeps surfacing new geometries, and retraces are exactly
+    what bucketing bounds), then ``reps`` further rounds reuse the cache.
+  * ``steady_frames_per_s``  — best-of-reps warm-cache dispatch wall,
+    isolating per-dispatch overhead once everything is compiled.
+
+plus one-time compile cost, the cache's ``traces_by_kind``, and
+max-abs-diff of its logits against the per-stream slow path
+(join-vs-stack parity).
+
+``benchmarks/check_regression.py --execute`` gates the artifact: parity
+within ``parity_atol`` for every mode, every bucketed mode beating the
+per-stream path on *episode* frames/s, bucketed retraces bounded by the
+bucket-edge count (and strictly below the exact path's per-α retraces),
+and wall ratios vs the committed baseline.
+
+  PYTHONPATH=src python benchmarks/execute_bench.py --out BENCH_execute.json
+  PYTHONPATH=src python benchmarks/execute_bench.py --smoke   # N=16, fewer reps
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+try:  # script (``python benchmarks/execute_bench.py``) vs package (run.py)
+    import common  # noqa: F401  (adds src/ to sys.path)
+except ModuleNotFoundError:
+    from benchmarks import common  # noqa: F401
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import engine, pruning  # noqa: E402
+from repro.core.bucketing import BucketingConfig, BucketTable  # noqa: E402
+from repro.models import param as param_lib  # noqa: E402
+from repro.models import vit as vit_lib  # noqa: E402
+
+# all eight α share the cloud schedule suffix (1, 1) at SPLIT on the
+# 50-token config while entering the cloud with 8 distinct token counts —
+# see tests/test_execute_bucketed.py, which asserts this
+ALPHAS = (0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+SPLIT = 4
+# padded-vs-unpadded logits: masking is exact, residual diff is XLA
+# reduction reassociation at different extents (worst observed ~5e-7 f32)
+PARITY_ATOL = 2e-6
+
+
+def _cfg50() -> vit_lib.ViTConfig:
+    return vit_lib.ViTConfig(img_res=56, patch=8, n_layers=6, d_model=32,
+                             n_heads=2, d_ff=64, n_classes=8)
+
+
+def _make_plans(cfg, params, n_streams: int) -> list[engine.ExecPlan]:
+    """Device partitions for N streams, α cycling over the grid, each with
+    its own input image. Device forwards are setup, not the thing measured."""
+    plans = []
+    for i in range(n_streams):
+        alpha = ALPHAS[i % len(ALPHAS)]
+        img = jax.random.normal(jax.random.key(1000 + i),
+                                (1, cfg.img_res, cfg.img_res, 3))
+        sched = tuple(pruning.make_schedule("exponential", alpha,
+                                            cfg.n_layers, cfg.num_tokens))
+        x, sizes = engine.device_forward(params, cfg, img, sched, SPLIT)
+        plans.append(engine.ExecPlan(sched, SPLIT, x=jax.block_until_ready(x),
+                                     sizes=jax.block_until_ready(sizes)))
+    return plans
+
+
+def _reset(plans) -> None:
+    for p in plans:
+        p.logits = None
+
+
+def _block(plans) -> None:
+    jax.block_until_ready([p.logits for p in plans])
+
+
+def _measure(dispatch, plans, reps: int) -> dict:
+    """Fresh-cache episode (compile round + reps warm rounds) and the
+    best-of-reps steady-state dispatch wall."""
+    _reset(plans)
+    t0 = time.perf_counter()
+    dispatch()
+    _block(plans)
+    compile_s = time.perf_counter() - t0
+    best, episode_s = float("inf"), compile_s
+    for _ in range(reps):
+        _reset(plans)
+        t0 = time.perf_counter()
+        dispatch()
+        _block(plans)
+        wall = time.perf_counter() - t0
+        episode_s += wall
+        best = min(best, wall)
+    return {"compile_s": compile_s,
+            "episode_wall_s": episode_s,
+            "episode_frames_per_s": len(plans) * (reps + 1) / episode_s,
+            "steady_wall_s": best,
+            "steady_frames_per_s": len(plans) / best}
+
+
+def _logits(plans) -> np.ndarray:
+    return np.concatenate([np.asarray(p.logits) for p in plans], axis=0)
+
+
+def run(n_streams: int, reps: int, edge_sweep: tuple[int, ...]) -> dict:
+    cfg = _cfg50()
+    params = param_lib.init_params(vit_lib.specs(cfg), jax.random.key(0))
+    plans = _make_plans(cfg, params, n_streams)
+    counts = sorted({p.x.shape[1] for p in plans})
+    suffixes = {p.schedule[SPLIT:] for p in plans}
+    print(f"[execute] N={n_streams} split={SPLIT} cloud-entry counts={counts} "
+          f"suffixes={sorted(suffixes)}")
+
+    rows = []
+
+    cache = engine.CompiledPlanCache()
+    row = {"mode": "per_stream", **_measure(
+        lambda: [engine.run_cloud_batch(cache, cfg, params, [p])
+                 for p in plans], plans, reps)}
+    row["traces"] = dict(cache.traces_by_kind)
+    ref = _logits(plans)
+    row["parity_max_abs_diff"] = 0.0  # per_stream IS the parity reference
+    rows.append(row)
+
+    cache = engine.CompiledPlanCache()
+    row = {"mode": "stacked_exact", **_measure(
+        lambda: engine.run_cloud_batch(cache, cfg, params, plans),
+        plans, reps)}
+    row["traces"] = dict(cache.traces_by_kind)
+    row["parity_max_abs_diff"] = float(np.abs(_logits(plans) - ref).max())
+    rows.append(row)
+
+    for k in edge_sweep:
+        table = BucketTable.build(cfg, ALPHAS,
+                                  config=BucketingConfig(n_edges=k))
+        cache = engine.CompiledPlanCache()
+        row = {"mode": f"bucketed_e{k}", "n_edges": k,
+               "edges_at_split": list(table.edges_by_split[SPLIT]),
+               "bucket_cells": table.n_cells, **_measure(
+                   lambda: engine.run_cloud_batch(cache, cfg, params, plans,
+                                                  buckets=table),
+                   plans, reps)}
+        row["traces"] = dict(cache.traces_by_kind)
+        row["parity_max_abs_diff"] = float(np.abs(_logits(plans) - ref).max())
+        rows.append(row)
+
+    for r in rows:
+        print(f"[execute] {r['mode']:>14}: episode "
+              f"{r['episode_frames_per_s']:7.1f} f/s, steady "
+              f"{r['steady_frames_per_s']:8.1f} f/s "
+              f"(compile {r['compile_s']:.2f}s) traces={r['traces']} "
+              f"parity={r['parity_max_abs_diff']:.2e}")
+
+    table = BucketTable.build(cfg, ALPHAS,
+                              config=BucketingConfig(n_edges=max(edge_sweep)))
+    return {
+        "config": {"streams": n_streams, "reps": reps, "split": SPLIT,
+                   "alphas": list(ALPHAS), "edge_sweep": list(edge_sweep),
+                   "model": {"img_res": cfg.img_res, "patch": cfg.patch,
+                             "n_layers": cfg.n_layers, "d_model": cfg.d_model},
+                   "backend": jax.default_backend()},
+        "cloud_entry_counts": counts,
+        "shared_suffixes": sorted(list(s) for s in suffixes),
+        "parity_atol": PARITY_ATOL,
+        "bucket_table": table.as_json(),
+        "modes": rows,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_execute.json")
+    ap.add_argument("--streams", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=16, 2 reps (CI-speed; still mixed-α)")
+    args = ap.parse_args(argv)
+    n = 16 if args.smoke else args.streams
+    reps = 2 if args.smoke else args.reps
+    out = run(n, reps, edge_sweep=(1, 2, 4))
+    out["config"]["smoke"] = bool(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"[execute] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -54,10 +54,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression, planner, pruning, scheduler as sched_lib
+from repro.core.bucketing import BucketTable
 from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
 from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import Decision, ModelProfile
 from repro.models import vit as vit_lib
+from repro.sharding import rules as rules_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,14 +234,30 @@ class CompiledPlanCache:
     partition program even when the scheduler re-picks the same (α, split).
     ``hits``/``misses`` count cache lookups; ``traces`` counts actual jax
     traces (the wrapped fn bumps it only while tracing), so tests can assert
-    "second frame with the same geometry does not retrace".
+    "second frame with the same geometry does not retrace";
+    ``traces_by_kind`` splits the same counter per partition program so the
+    execute bench can bound *cloud* retraces by the bucket-table cell count.
+
+    ``rules`` (optional ``sharding.Rules``) makes every compiled partition
+    mesh-aware: the partition programs trace under ``use_rules``, so the
+    ``constrain`` annotations inside ``vit.run_blocks`` /
+    ``run_blocks_padded`` become real ``NamedSharding`` constraints —
+    data-parallel over the stacked fleet batch, tensor-parallel over
+    heads/MLP when the rules profile maps them. With ``rules=None`` (the
+    default, and any single-device mesh) the programs are unchanged.
     """
 
-    def __init__(self):
+    def __init__(self, rules=None):
         self._fns: dict[tuple, Callable] = {}
+        self.rules = rules
         self.hits = 0
         self.misses = 0
         self.traces = 0
+        self.traces_by_kind: dict[str, int] = {}
+
+    def _bump(self, kind: str) -> None:
+        self.traces += 1
+        self.traces_by_kind[kind] = self.traces_by_kind.get(kind, 0) + 1
 
     def _get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
         fn = self._fns.get(key)
@@ -260,8 +278,9 @@ class CompiledPlanCache:
 
         def build():
             def traced(params, images):
-                self.traces += 1
-                return device_forward(params, cfg, images, schedule, split)
+                self._bump("device")
+                with rules_lib.use_rules(self.rules):
+                    return device_forward(params, cfg, images, schedule, split)
             return jax.jit(traced)
 
         return self._get(key, build)
@@ -272,37 +291,117 @@ class CompiledPlanCache:
 
         def build():
             def traced(params, x, sizes):
-                self.traces += 1
-                return cloud_forward(params, cfg, x, sizes, schedule, split)
+                self._bump("cloud")
+                with rules_lib.use_rules(self.rules):
+                    return cloud_forward(params, cfg, x, sizes, schedule, split)
+            return jax.jit(traced)
+
+        return self._get(key, build)
+
+    def cloud_padded_fn(self, cfg: vit_lib.ViTConfig, suffix: tuple[int, ...],
+                        split: int, x) -> Callable:
+        """Bucketed cloud partition: same program for every plan that shares
+        (schedule suffix past the split, split, bucket edge) — the key holds
+        only the suffix, since layers [0, split) never run here."""
+        key = ("cloud_padded", cfg, suffix, split, self._shape_key(x))
+
+        def build():
+            schedule = (0,) * split + tuple(suffix)
+
+            def traced(params, x, sizes):
+                self._bump("cloud_padded")
+                with rules_lib.use_rules(self.rules):
+                    x2, _ = vit_lib.run_blocks_padded(
+                        params, cfg, x, sizes, schedule, split, cfg.n_layers)
+                    return vit_lib.head_apply(params, cfg, x2)
             return jax.jit(traced)
 
         return self._get(key, build)
 
 
+def _pad_tokens(x: jax.Array, sizes: jax.Array, edge: int):
+    """Pad the token dim up to ``edge`` with zero-value, zero-size tokens.
+    Size 0 is the whole masking contract: ``log(0) = -inf`` proportional-
+    attention bias excludes pads from every softmax exactly, and the
+    pad-aware merge keys off ``sizes <= 0``."""
+    pad = edge - x.shape[1]
+    if pad == 0:
+        return x, sizes
+    return (jnp.pad(x, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(sizes, ((0, 0), (0, pad))))
+
+
 def run_cloud_batch(cache: CompiledPlanCache, cfg: vit_lib.ViTConfig,
-                    params: dict, plans: Sequence[ExecPlan]) -> None:
+                    params: dict, plans: Sequence[ExecPlan],
+                    buckets: BucketTable | None = None) -> None:
     """Execute pending cloud partitions, batching same-geometry plans into one
     stacked forward (micro-batched fleet items usually share the decision, so
     this turns B serial forwards into one [B·b, tokens, d] call). Fills each
-    plan's ``logits`` in place."""
+    plan's ``logits`` in place.
+
+    Without ``buckets``, plans batch only when their full (schedule, split,
+    token-count) geometry matches. With a ``BucketTable``, plans that share
+    just the *schedule suffix past the split* are padded up to a common
+    bucket edge and batch together — mixed-α traffic at a shared split
+    collapses onto a handful of compiled geometries (``cloud_padded_fn``),
+    and retraces are bounded by the table's (split, edge) cell count instead
+    of the number of distinct α in flight.
+    """
     n = cfg.n_layers
     groups: dict[tuple, list[ExecPlan]] = {}
     for plan in plans:
         if plan is None or plan.logits is not None:
             continue
         s = n if plan.split == n + 1 else plan.split
-        key = (plan.schedule, s, tuple(plan.x.shape[1:]), str(plan.x.dtype))
+        if buckets is None:
+            key = (plan.schedule, s, tuple(plan.x.shape[1:]), str(plan.x.dtype))
+        else:
+            edge = buckets.edge_for(s, plan.x.shape[1])
+            key = (plan.schedule[s:], s, edge, plan.x.shape[2],
+                   str(plan.x.dtype))
         groups.setdefault(key, []).append(plan)
-    for (schedule, s, _, _), members in groups.items():
-        x = jnp.concatenate([m.x for m in members], axis=0)
-        sizes = jnp.concatenate([m.sizes for m in members], axis=0)
-        fn = cache.cloud_fn(cfg, schedule, s, x)
+    for key, members in groups.items():
+        if buckets is None:
+            schedule, s = key[0], key[1]
+            x = jnp.concatenate([m.x for m in members], axis=0)
+            sizes = jnp.concatenate([m.sizes for m in members], axis=0)
+            fn = cache.cloud_fn(cfg, schedule, s, x)
+        else:
+            suffix, s, edge = key[0], key[1], key[2]
+            # pad once per distinct token count, not once per member: the
+            # eager pad/concat dispatches then scale with the handful of
+            # distinct counts in flight instead of the fleet size
+            by_count: dict[int, list[ExecPlan]] = {}
+            for m in members:
+                by_count.setdefault(m.x.shape[1], []).append(m)
+            chunks, members = [], []
+            for t in sorted(by_count):
+                ms = by_count[t]
+                cx = ms[0].x if len(ms) == 1 else \
+                    jnp.concatenate([m.x for m in ms], axis=0)
+                cs = ms[0].sizes if len(ms) == 1 else \
+                    jnp.concatenate([m.sizes for m in ms], axis=0)
+                chunks.append(_pad_tokens(cx, cs, edge))
+                members.extend(ms)
+            x = chunks[0][0] if len(chunks) == 1 else \
+                jnp.concatenate([c[0] for c in chunks], axis=0)
+            sizes = chunks[0][1] if len(chunks) == 1 else \
+                jnp.concatenate([c[1] for c in chunks], axis=0)
+            fn = cache.cloud_padded_fn(cfg, suffix, s, x)
         logits = fn(params, x, sizes)
         off = 0
         for m in members:
             b = m.x.shape[0]
             m.logits = logits[off:off + b]
             off += b
+
+
+def shard_params(params: dict, cfg: vit_lib.ViTConfig, rules) -> dict:
+    """Place a param tree per the rules' mesh before serving (dp replicates,
+    tp shards heads/MLP/vocab). The cache's compiled programs then consume
+    already-resident shards instead of re-transferring per call."""
+    shardings = rules_lib.params_sharding(vit_lib.specs(cfg), rules)
+    return jax.device_put(params, shardings)
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,10 @@ def _merge_one(x, sizes, src_idx, unm_idx, dst_idx):
     src_sizes = jnp.take(sa, src_idx, axis=0)
     b_new = bw.at[dst_idx].add(src_vals)
     sb_new = sb.at[dst_idx].add(src_sizes)
-    dst = b_new / sb_new[:, None]
+    # guard the divisor: real tokens always have sb_new >= 1 (bitwise no-op),
+    # but padded execution (tome_merge_padded) carries size-0 pad tokens whose
+    # 0/0 would otherwise mint NaNs that poison downstream attention
+    dst = b_new / jnp.maximum(sb_new, 1e-30)[:, None]
     unm = jnp.take(a, unm_idx, axis=0)
     s_unm = jnp.take(sa, unm_idx, axis=0)
     return jnp.concatenate([unm, dst], axis=0), jnp.concatenate([s_unm, sb_new], axis=0)
@@ -87,3 +90,58 @@ def tome_merge(x: jax.Array, metric: jax.Array, sizes: jax.Array, r: int, *,
         return x, sizes
     idx = bipartite_soft_matching(metric, r, protect_first=protect_first, scores_fn=scores_fn)
     return merge_tokens(x, sizes, idx)
+
+
+def tome_merge_padded(x: jax.Array, metric: jax.Array, sizes: jax.Array,
+                      r: int, *, protect_first: bool = True):
+    """Pad-aware ToMe step for bucketed execution (``core.bucketing``).
+
+    ``x`` carries real tokens first and padding tokens (``sizes == 0``) at the
+    tail; per batch member the real count may differ, so pad handling is
+    data-dependent (masks), never shape-dependent. Invariants that make the
+    merge of the real tokens *identical* to ``tome_merge`` on the unpadded
+    input:
+
+      * pad columns of the score matrix are ``-inf`` — no real token can pick
+        a pad as its merge destination;
+      * pad rows' ``node_max`` is ``-inf`` — pads sort behind every real
+        candidate, so the top-``r`` merged sources are always real tokens
+        (the schedule's clamp guarantees r < real unprotected A-candidates);
+      * after the merge, tokens are stably re-sorted so pads return to the
+        tail — the next layer's alternating A/B assignment of the real
+        tokens matches the unpadded run exactly.
+
+    The caller is responsible for keeping pads out of *attention* (token
+    sizes of 0 make the proportional-attention bias ``log(0) = -inf``, which
+    zeroes their softmax weight exactly). Requires the pure-jnp scoring path:
+    the Pallas ``scores_fn`` kernel has no pad-column masking.
+    """
+    if r <= 0:
+        return x, sizes
+    b, n, d = metric.shape
+    na = (n + 1) // 2
+    if not 0 < r < na:
+        raise ValueError(f"r={r} must be in (0, {na})")
+    m = metric.astype(jnp.float32)
+    m = m / (jnp.linalg.norm(m, axis=-1, keepdims=True) + 1e-6)
+    a, bset = m[:, ::2], m[:, 1::2]
+    pad_a = sizes[:, ::2] <= 0.0     # [B, Na]
+    pad_b = sizes[:, 1::2] <= 0.0    # [B, Nb]
+    scores = jnp.einsum("bnd,bmd->bnm", a, bset)
+    scores = jnp.where(pad_b[:, None, :], -jnp.inf, scores)
+    if protect_first:
+        scores = scores.at[:, 0, :].set(-jnp.inf)
+    node_max = jnp.where(pad_a, -jnp.inf, scores.max(axis=-1))
+    node_idx = scores.argmax(axis=-1)
+    order = jnp.argsort(-node_max, axis=-1, stable=True)
+    src_idx = order[:, :r]
+    unm_idx = jnp.sort(order[:, r:], axis=-1)
+    dst_idx = jnp.take_along_axis(node_idx, src_idx, axis=-1)
+    x, sizes = merge_tokens(x, sizes, MergeIndices(src_idx, unm_idx, dst_idx))
+    # pads land mid-sequence (between the unmerged A-set and the B-set);
+    # stably re-sort them to the tail so real-token order — and therefore the
+    # next layer's A/B split — is exactly the unpadded run's
+    tail = jnp.argsort((sizes <= 0.0).astype(jnp.int32), axis=-1, stable=True)
+    x = jnp.take_along_axis(x, tail[:, :, None], axis=1)
+    sizes = jnp.take_along_axis(sizes, tail, axis=1)
+    return x, sizes

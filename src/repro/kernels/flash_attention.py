@@ -8,6 +8,13 @@ axis, normalizing on the last step. Causal masking skips nothing structurally
 bq = bk = 128. D kept whole (<= 256 for all our archs).
 
 Used for ViT/DiT(S >= 256 tokens) and LM prefill; decode has its own kernel.
+
+Bucketed serving (``core.bucketing``) feeds this kernel padded token axes:
+an optional additive key ``bias`` [B, Sk] carries the ToMe proportional-
+attention term (``log(sizes)``, ``-inf`` on pads) and an optional per-batch
+``kv_len`` [B] masks keys past each member's real count — both reduce to the
+same tile-internal masking the OOB guard already does, so padded keys get
+exactly zero softmax weight.
 """
 from __future__ import annotations
 
@@ -21,9 +28,13 @@ from jax.experimental import pallas as pl
 _NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
-            bq: int, bk: int, sk_total: int, sq_total: int, causal: bool,
-            scale: float):
+def _kernel(*refs, bq: int, bk: int, sk_total: int, sq_total: int,
+            causal: bool, scale: float, has_bias: bool, has_kvlen: bool):
+    it = iter(refs)
+    q_ref, k_ref, v_ref = next(it), next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    kvlen_ref = next(it) if has_kvlen else None
+    o_ref, m_ref, l_ref = next(it), next(it), next(it)
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -45,8 +56,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    if has_bias:
+        # additive key bias (prop-attn log-sizes); clamp the pads' -inf to a
+        # large finite negative so s stays NaN-free (exp still underflows to
+        # exactly 0, which is the masking contract)
+        s = s + jnp.maximum(bias_ref[0].astype(jnp.float32), _NEG_INF)[None, :]
     kpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * bk
     mask = kpos < sk_total
+    if has_kvlen:
+        mask = jnp.logical_and(mask, kpos < kvlen_ref[0])
     if causal:
         qpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + i * bq
         mask = jnp.logical_and(mask, qpos + (sk_total - sq_total) >= kpos)
@@ -70,9 +88,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    bias: jax.Array | None = None,
+                    kv_len: jax.Array | None = None,
                     causal: bool = False, bq: int = 128, bk: int = 128,
                     interpret: bool = True) -> jax.Array:
-    """q,k,v: [B, H, S, D] (equal head counts) -> [B, H, Sq, D]."""
+    """q,k,v: [B, H, S, D] (equal head counts) -> [B, H, Sq, D].
+
+    ``bias`` [B, Sk]: additive per-key logit bias (broadcast over heads and
+    queries; the ToMe proportional-attention term). ``kv_len`` [B] int: real
+    key count per batch member — keys at or past it are masked (padded
+    bucket geometries).
+    """
     b, h, sq, d = q.shape
     sk = k.shape[2]
     bq = min(bq, sq)
@@ -81,16 +107,27 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kf = k.reshape(b * h, sk, d)
     vf = v.reshape(b * h, sk, d)
     grid = (b * h, pl.cdiv(sq, bq), pl.cdiv(sk, bk))
+    operands = [qf, kf, vf]
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+    ]
+    if bias is not None:
+        # broadcast [B, Sk] -> [B*H, Sk] so grid axis 0 indexes it directly
+        operands.append(jnp.repeat(bias.astype(jnp.float32), h, axis=0))
+        in_specs.append(pl.BlockSpec((1, bk), lambda g, i, j: (g, j)))
+    if kv_len is not None:
+        operands.append(jnp.repeat(kv_len.astype(jnp.int32)[:, None], h, axis=0))
+        in_specs.append(pl.BlockSpec((1, 1), lambda g, i, j: (g, 0)))
     kernel = functools.partial(_kernel, bq=bq, bk=bk, sk_total=sk, sq_total=sq,
-                               causal=causal, scale=1.0 / math.sqrt(d))
+                               causal=causal, scale=1.0 / math.sqrt(d),
+                               has_bias=bias is not None,
+                               has_kvlen=kv_len is not None)
     out, _, _ = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
             pl.BlockSpec((1, bq), lambda g, i, j: (g, i)),
@@ -102,5 +139,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             jax.ShapeDtypeStruct((b * h, sq), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf)
+    )(*operands)
     return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -31,12 +31,17 @@ def tome_scores(a, b, *, use_pallas: bool | None = None):
     return ref.tome_scores_ref(a, b)
 
 
-def flash_attention(q, k, v, *, causal: bool = False, use_pallas: bool | None = None):
+def flash_attention(q, k, v, *, bias=None, kv_len=None, causal: bool = False,
+                    use_pallas: bool | None = None):
+    """``bias`` [B, Sk] adds a per-key logit term (prop-attn log-sizes);
+    ``kv_len`` [B] masks keys past each member's real count (bucket pads)."""
     if use_pallas is None:
         use_pallas = True
     if use_pallas:
-        return _flash_pallas(q, k, v, causal=causal, interpret=not _on_tpu())
-    return ref.flash_attention_ref(q, k, v, causal=causal)
+        return _flash_pallas(q, k, v, bias=bias, kv_len=kv_len, causal=causal,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, bias=bias, kv_len=kv_len,
+                                   causal=causal)
 
 
 def decode_attention(q, k, v, length, *, use_pallas: bool | None = None):

@@ -16,11 +16,20 @@ def tome_scores_ref(a: jax.Array, b: jax.Array):
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        bias: jax.Array | None = None,
+                        kv_len: jax.Array | None = None,
                         causal: bool = False) -> jax.Array:
-    """q,k,v: [B, H, S, D] (same head count; GQA repeat happens in ops)."""
+    """q,k,v: [B, H, S, D] (same head count; GQA repeat happens in ops).
+    ``bias`` [B, Sk] additive per-key logit term; ``kv_len`` [B] real key
+    count (keys at or past it masked)."""
     d = q.shape[-1]
     s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(
         jnp.float32(d))
+    if bias is not None:
+        s = s + bias.astype(jnp.float32)[:, None, None, :]
+    if kv_len is not None:
+        valid = jnp.arange(k.shape[2])[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     if causal:
         sq, sk = q.shape[2], k.shape[2]
         mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :] - (sk - sq)

@@ -79,7 +79,8 @@ import time
 import jax
 
 from repro.configs import get_arch
-from repro.core import bandwidth, engine, planner, profiler, scheduler
+from repro.core import bandwidth, bucketing as bucketing_lib, engine, planner, \
+    profiler, scheduler
 from repro.models import param as param_lib
 from repro.models import vit as vit_lib
 from repro.serving import faults as faults_lib
@@ -188,8 +189,18 @@ def spec_from_args(args) -> workload_lib.WorkloadSpec:
 def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
     """Fleet mode: a workload scenario through one shared cloud tier."""
     spec = spec_from_args(args)
+    bucketing = mesh_rules = None
+    if args.execute and args.bucket_edges > 0:
+        bucketing = bucketing_lib.BucketingConfig(n_edges=args.bucket_edges)
+    if args.execute and args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding.rules import make_rules
+        mesh_rules = make_rules(args.mesh, make_host_mesh(
+            model=args.mesh_model))
     rt = workload_lib.build_runtime(spec, profile, eng_cfg,
-                                    model_cfg=model_cfg, params=params)
+                                    model_cfg=model_cfg, params=params,
+                                    bucketing=bucketing,
+                                    mesh_rules=mesh_rules)
     cloud = rt.cloud
     tel = None
     if args.telemetry_sample > 0:
@@ -237,6 +248,15 @@ def run_fleet(args, profile, eng_cfg, model_cfg=None, params=None, images=None):
     print(f"[fleet simcore] wall={sim_wall:.3f}s "
           f"per-frame={sim_wall / n_done * 1e6 if n_done else 0.0:.1f}us "
           f"(event-heap core; see benchmarks/fleet_scale_bench.py)")
+    if args.execute:
+        pc = rt.plan_cache
+        by_kind = " ".join(f"{k}={v}" for k, v in
+                           sorted(pc.traces_by_kind.items())) or "none"
+        buckets = f" bucket_cells={rt.buckets.n_cells}" if rt.buckets else ""
+        mesh = f" mesh={tuple(rt.mesh_rules.mesh.shape.items())}" \
+            if rt.mesh_rules is not None else ""
+        print(f"[fleet execute] plan_cache hits={pc.hits} misses={pc.misses} "
+              f"traces={pc.traces} ({by_kind}){buckets}{mesh}")
     if spec.autoscale is not None:
         print(f"[fleet autoscale] capacity peak={fs.peak_capacity} "
               f"final={fs.final_capacity} "
@@ -300,6 +320,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--execute", action="store_true",
                     help="run real split-model math on a reduced ViT")
+    ap.add_argument("--bucket-edges", type=int, default=0,
+                    help="with --execute: bucket cloud-partition token "
+                         "counts to at most N edges per split so mixed-α "
+                         "frames share compiled geometries (0 = exact "
+                         "geometries; see docs/execution.md)")
+    ap.add_argument("--mesh", default="",
+                    choices=["", "dp", "tp"],
+                    help="with --execute: shard the compiled partitions over "
+                         "the local host mesh (dp = data-parallel fleet "
+                         "batch, tp = + tensor-parallel heads/MLP); set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=K "
+                         "for a K-device CPU mesh")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis size of the --mesh host mesh")
     ap.add_argument("--streams", type=int, default=0,
                     help="fleet mode: N concurrent client streams through a "
                          "shared cloud tier (0 = classic single-stream mode)")

@@ -152,6 +152,50 @@ def run_blocks(params: dict, cfg: ViTConfig, x: jax.Array, sizes: jax.Array,
     return x, sizes
 
 
+def _block_padded(bp: dict, cfg: ViTConfig, x: jax.Array, sizes: jax.Array,
+                  merge_r: int = 0):
+    """Pad-aware block for bucketed execution (``core.bucketing``).
+
+    ``sizes == 0`` marks padding tokens (always at the tail on entry). The
+    masking is *exact*, not approximate: pad keys get an additive ``-inf``
+    attention bias — ``log(0)`` when proportional attention supplies the bias
+    anyway, an explicit 0/-inf mask otherwise — so their softmax weight is
+    exactly zero and real-token outputs equal the unpadded block's up to
+    XLA reduction-order (sub-ulp) effects. Merging goes through
+    ``tome.tome_merge_padded`` which keeps pads out of the matching and
+    restores them to the tail.
+    """
+    s32 = sizes.astype(jnp.float32)
+    if cfg.prop_attn:
+        bias = jnp.log(s32)  # pads: log(0) = -inf
+    else:
+        bias = jnp.where(s32 > 0.0, 0.0, -jnp.inf)
+    attn_out, _, metric = L.attention(
+        bp["attn"], L.layernorm(bp["ln1"], x), n_heads=cfg.n_heads, n_kv=cfg.n_heads,
+        head_dim=cfg.head_dim, bias=bias, return_metric=True)
+    x = x + attn_out
+    if merge_r > 0:
+        x, sizes = tome.tome_merge_padded(x, metric, sizes, merge_r)
+    x = x + L.mlp(bp["mlp"], L.layernorm(bp["ln2"], x))
+    return x, sizes
+
+
+def run_blocks_padded(params: dict, cfg: ViTConfig, x: jax.Array, sizes: jax.Array,
+                      schedule: Sequence[int], start: int, end: int):
+    """Pad-aware ``run_blocks``: same contract, but tail tokens with
+    ``sizes == 0`` are carried through every layer as inert padding. Token
+    count entering layer l is still static (bucket edge minus merges so far);
+    the *real* token count per batch member is data, not shape."""
+    assert len(schedule) == cfg.n_layers
+    from repro.sharding import constrain
+    for l in range(start, end):
+        x, sizes = _block_padded(layer_params(params, l), cfg, x, sizes,
+                                 merge_r=int(schedule[l]))
+        x = constrain(x, ("batch", None, None))
+        sizes = constrain(sizes, ("batch", None))
+    return x, sizes
+
+
 def head_apply(params: dict, cfg: ViTConfig, x: jax.Array) -> jax.Array:
     x = L.layernorm(params["norm"], x)
     return L.linear(params["head"], x[:, 0])

@@ -107,9 +107,10 @@ import itertools
 import numpy as np
 
 from repro.core.bandwidth import HarmonicMeanEstimator, NetworkTrace
+from repro.core.bucketing import BucketingConfig, BucketTable
 from repro.core.engine import (CompiledPlanCache, EngineConfig, FrameResult,
                                FrameStep, JanusEngine, RunStats,
-                               run_cloud_batch)
+                               run_cloud_batch, shard_params)
 from repro.core.pruning import AccuracyModel
 from repro.core.scheduler import ModelProfile
 from repro.serving import sla as sla_lib
@@ -620,7 +621,9 @@ class FleetRuntime:
                  priority: bool | None = None,
                  regions: list[RegionSpec] | None = None,
                  spill_slack_s: float = 0.025,
-                 faults: FaultSpec | None = None):
+                 faults: FaultSpec | None = None,
+                 bucketing: BucketingConfig | BucketTable | None = None,
+                 mesh_rules=None):
         self.streams = streams
         self.cloud = cloud or default_cloud_config(len(streams))
         if isinstance(autoscaler, AutoscaleConfig):
@@ -673,10 +676,18 @@ class FleetRuntime:
             any(s.sla_class != sla_lib.DEFAULT_CLASS for s in streams)
         acc = acc_model or AccuracyModel()
         self.model_cfg = model_cfg
+        # mesh-aware execution: place params per the rules' mesh once, and
+        # hand the rules to the plan cache so every compiled partition traces
+        # with NamedSharding constraints (dp over the stacked fleet batch,
+        # optional tp over heads/MLP). rules=None keeps programs unchanged.
+        self.mesh_rules = mesh_rules
+        if mesh_rules is not None and params is not None and \
+                model_cfg is not None:
+            params = shard_params(params, model_cfg, mesh_rules)
         self.params = params
         # one compiled-plan cache for the whole fleet: streams share the model,
         # so same-geometry partition programs compile once fleet-wide
-        self.plan_cache = CompiledPlanCache()
+        self.plan_cache = CompiledPlanCache(rules=mesh_rules)
         # per-stream scheduler state: a dedicated engine (shared model/plan
         # cache; profile per device tier, planner tables value-shared per
         # tier) so per-stream SLAs and hardware drive per-stream decisions
@@ -699,6 +710,19 @@ class FleetRuntime:
             for s in streams
         ]
         self._execute = base_cfg.execute and params is not None
+        # token-count bucketing (core.bucketing): mixed-α cloud partitions at
+        # a shared split pad up to bucket edges and share compiled geometries.
+        # None (the default) keeps the exact-geometry batching path.
+        self.buckets: BucketTable | None = None
+        if bucketing is not None and self._execute:
+            if isinstance(bucketing, BucketTable):
+                self.buckets = bucketing
+            else:
+                alphas = sorted({float(a) for e in self.engines
+                                 for a in e.tables.alpha_grid})
+                self.buckets = BucketTable.build(
+                    model_cfg, alphas, kind=profile.schedule_kind,
+                    config=bucketing)
 
     def run(self, images=None, telemetry=None) -> FleetStats:
         """Run the fleet on the event-heap simulator core
@@ -841,7 +865,8 @@ class FleetRuntime:
                 # same-geometry frames execute as one stacked forward instead
                 # of B serial ones (the compiled fn is cached per geometry)
                 run_cloud_batch(self.plan_cache, self.model_cfg, self.params,
-                                [m.step.exec_plan for m in members])
+                                [m.step.exec_plan for m in members],
+                                buckets=self.buckets)
             service = max(m.step.breakdown.cloud_s for m in members) \
                 * (1.0 + cloud.batch_growth * (len(batch) - 1))
             # retire executor slots freed past a capacity shrink (lazy: slots

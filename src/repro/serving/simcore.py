@@ -871,7 +871,8 @@ def simulate(rt, images=None, record: list | None = None, telemetry=None):
         members = [req.rid for req in batch]
         if rt._execute and engine_mode:
             run_cloud_batch(rt.plan_cache, rt.model_cfg, rt.params,
-                            [exec_plans[rid] for rid in members])
+                            [exec_plans[rid] for rid in members],
+                            buckets=rt.buckets)
         service = max(recs[rid][5] for rid in members) \
             * (1.0 + cloud.batch_growth * (len(batch) - 1))
         ex, scaler = executors[r], scalers[r]

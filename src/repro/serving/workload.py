@@ -570,8 +570,11 @@ class WorkloadSpec:
 
 def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
                   base_cfg: EngineConfig, *, acc_model=None,
-                  model_cfg=None, params=None) -> fleet.FleetRuntime:
-    """A ready-to-run FleetRuntime for the scenario."""
+                  model_cfg=None, params=None, bucketing=None,
+                  mesh_rules=None) -> fleet.FleetRuntime:
+    """A ready-to-run FleetRuntime for the scenario. ``bucketing`` /
+    ``mesh_rules`` configure the real-execution fast path (token-count
+    bucketing and mesh-sharded cloud partitions; see docs/execution.md)."""
     return fleet.FleetRuntime(
         profile, base_cfg, spec.build_streams(profile),
         cloud=spec.cloud_config(), acc_model=acc_model,
@@ -581,4 +584,5 @@ def build_runtime(spec: WorkloadSpec, profile: ModelProfile,
         priority=spec.priority,
         regions=spec.resolved_regions() or None,
         spill_slack_s=spec.spill_slack_ms / 1e3,
-        faults=spec.faults)
+        faults=spec.faults,
+        bucketing=bucketing, mesh_rules=mesh_rules)

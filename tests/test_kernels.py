@@ -51,6 +51,45 @@ def test_flash_attention_matches_ref(b, h, sq, sk, d, causal):
                                atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.parametrize("b,h,s,d", [(2, 2, 64, 32), (3, 1, 130, 16)])
+def test_flash_attention_key_bias_matches_ref(b, h, s, d):
+    """Additive per-key bias (ToMe prop-attn log-sizes; -inf marks bucket
+    pads) against the jnp oracle."""
+    q = _randn((b, h, s, d), jnp.float32)
+    k = _randn((b, h, s, d), jnp.float32)
+    v = _randn((b, h, s, d), jnp.float32)
+    real = s - 7
+    sizes = jnp.where(jnp.arange(s)[None, :] < real,
+                      jnp.asarray(1.0 + RNG.uniform(size=(b, s)), jnp.float32),
+                      0.0)
+    bias = jnp.log(sizes)  # -inf on the padded tail
+    out = flash_attention(q, k, v, bias=bias, bq=64, bk=64)
+    expected = ref.flash_attention_ref(q, k, v, bias=bias)
+    assert not np.any(np.isnan(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(3, 2, 64, 32), (2, 2, 100, 16)])
+def test_flash_attention_kv_len_equals_truncation(b, h, s, d):
+    """Per-batch kv_len masking must equal physically truncating the padded
+    keys for the real queries."""
+    q = _randn((b, h, s, d), jnp.float32)
+    k = _randn((b, h, s, d), jnp.float32)
+    v = _randn((b, h, s, d), jnp.float32)
+    kv_len = jnp.asarray([s, s - 9, s // 2][:b], jnp.int32)
+    out = flash_attention(q, k, v, kv_len=kv_len, bq=64, bk=64)
+    expected = ref.flash_attention_ref(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=1e-4)
+    for bi in range(b):
+        n = int(kv_len[bi])
+        trunc = ref.flash_attention_ref(q[bi:bi + 1, :, :n], k[bi:bi + 1, :, :n],
+                                        v[bi:bi + 1, :, :n])
+        np.testing.assert_allclose(np.asarray(out[bi:bi + 1, :, :n]),
+                                   np.asarray(trunc), atol=2e-5, rtol=1e-4)
+
+
 def test_flash_attention_bf16():
     q = _randn((1, 2, 128, 64), jnp.bfloat16)
     k = _randn((1, 2, 128, 64), jnp.bfloat16)

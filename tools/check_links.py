@@ -1,0 +1,77 @@
+"""Docs link check (stdlib only; wired into ``make lint`` / CI).
+
+Validates, for ``README.md`` and every ``docs/*.md``:
+
+  * relative markdown links ``[text](path)`` resolve to an existing file
+    or directory (fragments are stripped; ``http(s)://`` / ``mailto:`` /
+    pure ``#anchor`` links are out of scope), and
+  * backticked repo paths — any ``dir/file.ext``-shaped token inside a
+    code span, including inside command lines — exist, resolved against
+    the repo root, ``src/repro`` (the docs' ``core/engine.py``-style
+    shorthand), or the referencing document's directory. Bare file
+    names without a ``/`` (generated artifacts like ``BENCH_*.json``,
+    module names) and glob patterns are skipped.
+
+Exit 1 with one line per dangling reference, so a doc can't drift ahead
+of a rename silently.
+
+  python tools/check_links.py            # from the repo root
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`]+)`")
+# a path-shaped token: has a directory separator and a file extension
+PATHY = re.compile(r"[\w.-]+(?:/[\w.-]+)+\.(?:py|md|json|ya?ml|toml|ini|txt)")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _exists(target: str, doc: pathlib.Path) -> bool:
+    return ((ROOT / target).exists()
+            or (ROOT / "src" / "repro" / target).exists()
+            or (doc.parent / target).exists())
+
+
+def check(doc: pathlib.Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    rel = doc.relative_to(ROOT)
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        if not _exists(target, doc):
+            errors.append(f"{rel}: dangling link ({m.group(1)})")
+    for span in CODE_SPAN.finditer(text):
+        if "*" in span.group(1):
+            continue  # glob patterns describe shapes, not files
+        for m in PATHY.finditer(span.group(1)):
+            target = m.group(0).rstrip(".")
+            if not _exists(target, doc):
+                errors.append(f"{rel}: dangling path `{target}`")
+    return errors
+
+
+def main() -> int:
+    docs = _doc_files()
+    errors = [e for doc in docs for e in check(doc)]
+    for e in errors:
+        print(f"[check_links] {e}")
+    print(f"[check_links] {len(docs)} docs checked, "
+          f"{len(errors)} dangling reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
