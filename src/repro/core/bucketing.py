@@ -87,13 +87,22 @@ class BucketTable:
         the executed model and bucket them per split. Splits run 0..n_layers:
         split 0 is the cloud-only geometry, split n is the head-only program
         a device-only frame still dispatches."""
+        return cls.build_for(model_cfg.n_layers, model_cfg.num_tokens, alphas,
+                             kind=kind, config=config)
+
+    @classmethod
+    def build_for(cls, n_layers: int, num_tokens: int, alphas: Iterable[float],
+                  *, kind: str = "exponential",
+                  config: BucketingConfig | None = None) -> "BucketTable":
+        """``build`` from the raw (n_layers, num_tokens) geometry — no
+        ViTConfig needed. The step-aware planner prices the *timing-plane*
+        profile, which may model a bigger ViT than the executed one."""
         config = config or BucketingConfig()
-        n = model_cfg.n_layers
+        n = n_layers
         counts_by_split: dict[int, set[int]] = {s: set() for s in range(n + 1)}
         for alpha in alphas:
-            sched = pruning.make_schedule(kind, float(alpha), n,
-                                          model_cfg.num_tokens)
-            counts = pruning.token_counts(model_cfg.num_tokens, sched)
+            sched = pruning.make_schedule(kind, float(alpha), n, num_tokens)
+            counts = pruning.token_counts(num_tokens, sched)
             for s in range(n + 1):
                 counts_by_split[s].add(int(counts[s]))
         return cls({s: bucket_edges(c, config.n_edges)

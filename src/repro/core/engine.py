@@ -76,11 +76,23 @@ class EngineConfig:
     # degrades accuracy, not just latency; see workload.DeviceTier) — 1.0 is
     # the identity, so default configs reproduce the unscaled model bit-exact
     accuracy_scale: float = 1.0
+    # Algorithm-1 knobs as one value object; when set it overrides the flat
+    # ``t``/``k`` fields above (which are the deprecated pre-PlannerConfig
+    # shape, kept for one release)
+    planner_cfg: planner.PlannerConfig | None = None
 
     def __post_init__(self):
         if self.accuracy_scale <= 0:
             raise ValueError(
                 f"accuracy_scale must be > 0, got {self.accuracy_scale}")
+
+    @property
+    def planner_config(self) -> planner.PlannerConfig:
+        """Resolved planner knobs: ``planner_cfg`` when set, else the flat
+        ``t``/``k`` fields."""
+        if self.planner_cfg is not None:
+            return self.planner_cfg
+        return planner.PlannerConfig(t=self.t, k=self.k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -423,7 +435,7 @@ class JanusEngine:
         self._estimator = HarmonicMeanEstimator()
         # shared vectorized planner state (one tables instance per profile
         # value — fleet engines sharing a profile share the tables)
-        self.tables = planner.tables_for(profile, t=engine_cfg.t, k=engine_cfg.k)
+        self.tables = planner.tables_for(profile, engine_cfg.planner_config)
         self.plan_cache = plan_cache or CompiledPlanCache()
         # fixed baseline schedule/counts: derived once, not per frame
         self._fixed_schedule = tuple(pruning.clamp_schedule(
@@ -479,8 +491,10 @@ class JanusEngine:
         n = p.n_layers
         if policy == "janus":
             if c.planner == "legacy":
+                pc = c.planner_config
                 return sched_lib._reference_schedule(p, bandwidth_est, rtt_s,
-                                                     c.sla_s, t=c.t, k=c.k)
+                                                     c.sla_s, t=pc.t, k=pc.k,
+                                                     alpha_grid=pc.alpha_grid)
             return self.tables.decide(bandwidth_est, rtt_s, c.sla_s)
         fixed, counts = self._fixed_schedule, self._fixed_counts
         if policy == "device":

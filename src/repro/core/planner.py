@@ -24,6 +24,17 @@ Decision parity with the legacy loop (kept as
 ``tests/test_planner.py``; per-decision wall time is tracked by
 ``benchmarks/planner_bench.py`` (BENCH_planner.json).
 
+The latency columns are priced through the profile's
+:class:`~repro.core.profiler.LatencyModel`\\ s — any vectorized predictor,
+not just the paper's linear fit. With a :class:`~repro.core.profiler.
+StepProfiler` cloud model (``step_aware_profile``) the cloud columns become
+bucket-edge *plateaus*: α rows whose padded token counts coincide cost
+identically, and the argmin tie-breaks above resolve every plateau tie
+toward the lowest α — the least-pruned, highest-accuracy member of the
+bucket cell. That α-snapping is exactly the "pruning one more token is
+enough" frontier move (docs/planner.md; gated by the ``planner_buckets``
+section of BENCH_planner.json).
+
 Tables are cached by *profile value* (not identity) in a small LRU, so the
 fleet runtime's N engines sharing one fitted profile share one tables
 instance, and repeated profile construction (benchmarks, tests) stays cheap.
@@ -37,7 +48,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import pruning, splitter
+from repro.core import bucketing as bucketing_lib
+from repro.core import profiler, pruning, splitter
 from repro.core.scheduler import Decision, ModelProfile
 
 
@@ -46,6 +58,58 @@ def default_alpha_grid(n_layers: int, x0: int, t: float) -> tuple[float, ...]:
     amax = pruning.alpha_max(n_layers, x0, t)
     steps = int(round(amax / t))
     return tuple(round(i * t, 10) for i in range(steps + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Algorithm-1 knobs, previously sprawled as ``tables_for(profile, t=,
+    k=, alpha_grid=)`` keywords. One value object, JSON round-trippable like
+    ``BucketingConfig``/``AutoscaleConfig``, threaded through ``scheduler``,
+    ``engine.EngineConfig``, and the serve CLI.
+
+    ``t`` is the α-scan step (Eq. 2), ``k`` the fine-to-coarse split-candidate
+    spacing, ``alpha_grid`` an explicit α grid overriding the default scan.
+    """
+    t: float = 0.01
+    k: int = 5
+    alpha_grid: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if self.t <= 0:
+            raise ValueError(f"t must be > 0, got {self.t}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.alpha_grid is not None:
+            object.__setattr__(self, "alpha_grid",
+                               tuple(float(a) for a in self.alpha_grid))
+
+    def to_json(self) -> dict:
+        d = {"t": self.t, "k": self.k}
+        if self.alpha_grid is not None:
+            d["alpha_grid"] = list(self.alpha_grid)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PlannerConfig":
+        grid = d.get("alpha_grid")
+        return cls(t=float(d.get("t", 0.01)), k=int(d.get("k", 5)),
+                   alpha_grid=None if grid is None else tuple(grid))
+
+
+def _resolve_config(config: PlannerConfig | None, t: float | None,
+                    k: int | None,
+                    alpha_grid: Sequence[float] | None) -> PlannerConfig:
+    """One release of compatibility: accept either a PlannerConfig or the
+    pre-PlannerConfig bare ``t=/k=/alpha_grid=`` keywords (deprecated — the
+    keywords will be dropped once callers migrate), never both."""
+    if config is not None:
+        if t is not None or k is not None or alpha_grid is not None:
+            raise TypeError("pass a PlannerConfig or bare t=/k=/alpha_grid= "
+                            "keywords, not both")
+        return config
+    return PlannerConfig(
+        t=0.01 if t is None else t, k=5 if k is None else k,
+        alpha_grid=None if alpha_grid is None else tuple(alpha_grid))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,9 +135,20 @@ class PlannerTables:
 
     # -- construction --------------------------------------------------------
     @classmethod
-    def build(cls, profile: ModelProfile, *, t: float = 0.01, k: int = 5,
+    def build(cls, profile: ModelProfile, config: PlannerConfig | None = None,
+              *, t: float | None = None, k: int | None = None,
               alpha_grid: Sequence[float] | None = None) -> "PlannerTables":
+        """Precompute the tables for ``profile`` under ``config`` (the bare
+        ``t=/k=/alpha_grid=`` keywords are the deprecated pre-PlannerConfig
+        call shape, kept working for one release).
+
+        ``profile.device`` / ``profile.cloud`` may be any ``LatencyModel``
+        with a vectorized ``predict`` — the linear fit and the step-plateau
+        model run through the identical float pipeline below."""
+        config = _resolve_config(config, t, k, alpha_grid)
+        t, k = config.t, config.k
         n, x0 = profile.n_layers, profile.x0
+        alpha_grid = config.alpha_grid
         if alpha_grid is None:
             alpha_grid = default_alpha_grid(n, x0, t)
         alphas = np.asarray(alpha_grid, dtype=np.float64)
@@ -138,7 +213,17 @@ class PlannerTables:
         return (self.dev_s + comm) + self.cloud_s
 
     def decide(self, bandwidth_bps: float, rtt_s: float, sla_s: float) -> Decision:
-        """Algorithm 1 over the precomputed tables (exact legacy semantics)."""
+        """Algorithm 1 over the precomputed tables (exact legacy semantics).
+
+        α-snapping under a step latency model: when the cloud columns are
+        plateau-priced (``step_aware_profile``), every α whose padded counts
+        land in the same bucket cell produces *identical* latency floats, and
+        both argmin paths below — first-feasible α, and the fallback's
+        first-occurrence ``np.argmin`` — resolve such ties toward the lowest
+        α: the least-pruned, highest-accuracy member of the plateau. The
+        snapped choice is never worse than any other tie-break in
+        (latency, accuracy) lexicographic order (tests/test_step_planner.py).
+        """
         t0 = time.perf_counter()
         lat = self.latency_matrix(bandwidth_bps, rtt_s)
         best_j = np.argmin(lat, axis=1)          # first min → smallest split
@@ -185,29 +270,75 @@ _CACHE: OrderedDict[tuple, PlannerTables] = OrderedDict()
 _CACHE_MAX = 64
 
 
+def _model_signature(model) -> tuple:
+    """Hashable value identity for one LatencyModel. Models expose it via
+    the protocol's ``signature()``; anything predating the protocol falls
+    back to the linear fit's (a, b)."""
+    sig = getattr(model, "signature", None)
+    if sig is not None:
+        return sig()
+    return (type(model).__name__, model.a, model.b)
+
+
 def _profile_signature(profile: ModelProfile) -> tuple:
-    """Hashable value identity for a ModelProfile (LinearProfiler fields are
-    plain floats; the dataclass itself is unhashable because the profilers are
-    mutable)."""
+    """Hashable value identity for a ModelProfile (the LatencyModel
+    signatures are tuples of plain floats; the dataclass itself is
+    unhashable because the models are mutable)."""
     return (profile.n_layers, profile.x0, profile.token_bytes,
             profile.raw_input_bytes,
-            profile.device.a, profile.device.b,
-            profile.cloud.a, profile.cloud.b,
+            _model_signature(profile.device),
+            _model_signature(profile.cloud),
             profile.device_embed_s, profile.cloud_embed_s, profile.head_s,
             profile.schedule_kind)
 
 
-def tables_for(profile: ModelProfile, *, t: float = 0.01, k: int = 5,
+def tables_for(profile: ModelProfile, config: PlannerConfig | None = None,
+               *, t: float | None = None, k: int | None = None,
                alpha_grid: Sequence[float] | None = None) -> PlannerTables:
-    """Cached :class:`PlannerTables` for a profile (LRU by profile *value*)."""
-    key = (_profile_signature(profile), t, k,
-           tuple(alpha_grid) if alpha_grid is not None else None)
+    """Cached :class:`PlannerTables` for a profile (LRU by profile *value*).
+
+    Prefer ``tables_for(profile, PlannerConfig(...))``; the bare
+    ``t=/k=/alpha_grid=`` keywords are the deprecated pre-PlannerConfig call
+    shape, kept for one release (both shapes hit the same cache entry)."""
+    config = _resolve_config(config, t, k, alpha_grid)
+    key = (_profile_signature(profile), config.t, config.k, config.alpha_grid)
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE.move_to_end(key)
         return hit
-    tables = PlannerTables.build(profile, t=t, k=k, alpha_grid=alpha_grid)
+    tables = PlannerTables.build(profile, config)
     _CACHE[key] = tables
     while len(_CACHE) > _CACHE_MAX:
         _CACHE.popitem(last=False)
     return tables
+
+
+# ---------------------------------------------------------------------------
+# step-aware profiles (bucketed pruning)
+# ---------------------------------------------------------------------------
+
+
+def step_aware_profile(profile: ModelProfile,
+                       bucketing: bucketing_lib.BucketingConfig | None = None,
+                       config: PlannerConfig | None = None) -> ModelProfile:
+    """The profile with its cloud model snapped to bucket-edge plateaus.
+
+    Enumerates the same per-split edge table the execution path builds
+    (``BucketTable.build_for`` over the planner's α grid), unions the edges
+    across splits, and replaces ``profile.cloud`` with a
+    :class:`~repro.core.profiler.StepProfiler` priced at the padded counts —
+    so the planner (and, through ``AcctTables``, the fleet simulator) sees
+    the plateaus the bucketed ``--execute`` path actually runs. The device
+    model is left smooth: the device partition runs exact geometry on the
+    client, only the cloud partition is padded.
+    """
+    cfg = config or PlannerConfig()
+    alphas = cfg.alpha_grid
+    if alphas is None:
+        alphas = default_alpha_grid(profile.n_layers, profile.x0, cfg.t)
+    table = bucketing_lib.BucketTable.build_for(
+        profile.n_layers, profile.x0, alphas, kind=profile.schedule_kind,
+        config=bucketing)
+    edges = sorted({e for es in table.edges_by_split.values() for e in es})
+    return dataclasses.replace(
+        profile, cloud=profiler.StepProfiler.from_model(profile.cloud, edges))

@@ -24,18 +24,22 @@ import time
 from typing import Sequence
 
 from repro.core import pruning, splitter
-from repro.core.profiler import LinearProfiler
+from repro.core.profiler import LatencyModel
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelProfile:
-    """Everything the scheduler needs to know about one ViT deployment."""
+    """Everything the scheduler needs to know about one ViT deployment.
+
+    ``device`` / ``cloud`` are any :class:`~repro.core.profiler.LatencyModel`
+    (the paper's ``LinearProfiler`` fit, or a ``StepProfiler`` plateau model
+    for bucket-padded accelerators — see ``planner.step_aware_profile``)."""
     n_layers: int
     x0: int                      # initial token count (patches + cls)
     token_bytes: float           # D_M: bytes per token after compression
     raw_input_bytes: float       # compressed raw frame size (s=0 transfer)
-    device: LinearProfiler       # per-layer latency on the device tier
-    cloud: LinearProfiler        # per-layer latency on the cloud tier
+    device: LatencyModel         # per-layer latency on the device tier
+    cloud: LatencyModel          # per-layer latency on the cloud tier
     device_embed_s: float = 0.0  # embedding cost on device (s >= 1)
     cloud_embed_s: float = 0.0   # embedding cost on cloud (s == 0)
     head_s: float = 0.0          # head cost (wherever the tail runs)
@@ -101,25 +105,29 @@ def _reference_schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: floa
 
 
 def schedule(profile: ModelProfile, bandwidth_bps: float, rtt_s: float, sla_s: float,
-             *, t: float = 0.01, k: int = 5,
+             config=None, *, t: float | None = None, k: int | None = None,
              alpha_grid: Sequence[float] | None = None) -> Decision:
     """Algorithm 1. Returns the chosen (α, split).
 
     Table-driven: the first call for a given profile builds the planner
     tables (``planner.tables_for`` LRU caches them by profile value); every
-    subsequent decision is vectorized array math."""
+    subsequent decision is vectorized array math. ``config`` is a
+    ``planner.PlannerConfig``; the bare ``t=/k=/alpha_grid=`` keywords are
+    the deprecated pre-PlannerConfig call shape, kept for one release."""
     from repro.core import planner
-    return planner.tables_for(profile, t=t, k=k, alpha_grid=alpha_grid) \
+    return planner.tables_for(profile, config, t=t, k=k, alpha_grid=alpha_grid) \
         .decide(bandwidth_bps, rtt_s, sla_s)
 
 
 def sweep_alpha(profile: ModelProfile, bandwidth_bps: float, rtt_s: float,
-                sla_s: float = float("inf"), *, t: float = 0.01,
-                k: int = 5) -> list[Decision]:
+                sla_s: float = float("inf"), config=None, *,
+                t: float | None = None, k: int | None = None) -> list[Decision]:
     """Full (α → best split) map — used by sensitivity benchmarks (Fig 9).
 
     Shares the planner tables with ``schedule`` (no duplicated schedule/count
     derivation), and ``meets_sla`` is evaluated against ``sla_s`` instead of
-    the old hardcoded ``False`` (the default ∞ marks every point feasible)."""
+    the old hardcoded ``False`` (the default ∞ marks every point feasible).
+    ``config``/keyword compatibility as in :func:`schedule`."""
     from repro.core import planner
-    return planner.tables_for(profile, t=t, k=k).sweep(bandwidth_bps, rtt_s, sla_s)
+    return planner.tables_for(profile, config, t=t, k=k) \
+        .sweep(bandwidth_bps, rtt_s, sla_s)

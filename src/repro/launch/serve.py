@@ -68,7 +68,11 @@ Scheduling decisions run on the vectorized planner tables
 (``repro.core.planner``; ``--planner legacy`` selects the reference
 Algorithm-1 loop for comparison), and ``--streams N --execute`` runs the real
 cloud-partition math batched per micro-batch through the fleet-shared
-compiled-plan cache.
+compiled-plan cache. ``--step-planner EDGES`` makes the planner
+latency-step-aware: the cloud profile becomes a bucket-edge plateau model
+(``StepProfiler``) so Algorithm 1 snaps α to padding-bucket edges — the
+pricing the bucketed ``--execute`` path actually runs (see
+``docs/planner.md``).
 """
 from __future__ import annotations
 
@@ -445,6 +449,17 @@ def main(argv=None):
     ap.add_argument("--planner", default="tables", choices=["tables", "legacy"],
                     help="Algorithm-1 implementation: vectorized planner "
                          "tables (default) or the reference pure-Python loop")
+    ap.add_argument("--step-planner", type=int, default=0, metavar="EDGES",
+                    help="price plans on bucket-edge latency plateaus: wrap "
+                         "the cloud profile in a StepProfiler at <= EDGES "
+                         "bucket edges per split, so the planner snaps α to "
+                         "the least-pruned member of each plateau (0 = the "
+                         "paper's smooth linear model; see docs/planner.md)")
+    ap.add_argument("--alpha-step", type=float, default=0.01,
+                    help="Algorithm-1 α-scan step t (PlannerConfig.t)")
+    ap.add_argument("--split-spacing", type=int, default=5,
+                    help="fine-to-coarse split-candidate spacing k "
+                         "(PlannerConfig.k)")
     args = ap.parse_args(argv)
 
     if args.streams <= 0 and not args.workload:
@@ -470,13 +485,23 @@ def main(argv=None):
     paper = get_arch("janus-vit-l384")
     cfg_timing = paper.config          # timing plane: the paper's ViT-L@384
     profile = make_profile(cfg_timing)
-    tables = planner.tables_for(profile)
+    planner_cfg = planner.PlannerConfig(t=args.alpha_step,
+                                        k=args.split_spacing)
+    if args.step_planner > 0:
+        profile = planner.step_aware_profile(
+            profile, bucketing_lib.BucketingConfig(n_edges=args.step_planner),
+            planner_cfg)
+    tables = planner.tables_for(profile, planner_cfg)
     if args.planner == "legacy":  # measure the implementation actually used
         dec = scheduler._reference_schedule(profile, 10e6, 0.02,
-                                            args.sla_ms / 1e3)
+                                            args.sla_ms / 1e3,
+                                            t=planner_cfg.t, k=planner_cfg.k)
     else:
         dec = tables.decide(10e6, 0.02, args.sla_ms / 1e3)  # representative state
-    print(f"[planner] {args.planner}: alpha_grid={len(tables.alpha_grid)} "
+    model_kind = f"step(<={args.step_planner}/split)" if args.step_planner \
+        else "linear"
+    print(f"[planner] {args.planner}: latency_model={model_kind} "
+          f"alpha_grid={len(tables.alpha_grid)} "
           f"splits={len(tables.candidates)} "
           f"decide={dec.scheduler_overhead_s*1e6:.0f}us/frame")
 
@@ -488,7 +513,8 @@ def main(argv=None):
                                    (1, model_cfg.img_res, model_cfg.img_res, 3))
 
     eng_cfg = engine.EngineConfig(sla_s=args.sla_ms / 1e3, execute=args.execute,
-                                  planner=args.planner)
+                                  planner=args.planner,
+                                  planner_cfg=planner_cfg)
     if args.streams > 0 or args.workload:
         run_fleet(args, profile, eng_cfg, model_cfg=model_cfg, params=params,
                   images=images)

@@ -116,6 +116,12 @@ class AcctTables:
     ``tests/test_simcore.py``). ``payload``/``bits`` are reused from the
     planner tables (identical single-multiply construction), and ``acc[a]``
     is the accuracy model evaluated once per α row.
+
+    The per-layer latencies come from the profile's ``LatencyModel``s, so a
+    step-plateau cloud model (``planner.step_aware_profile``) flows through
+    unchanged: the simulation prices the exact bucket plateaus the bucketed
+    ``--execute`` path runs, and ``decide_batch`` inherits the planner's
+    plateau-tie α-snapping (lowest α wins equal-latency cells) for free.
     """
 
     __slots__ = ("tables", "dev", "cloud", "payload", "bits", "acc",

@@ -49,7 +49,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import bandwidth, planner, profiler
+from repro.core import bandwidth, planner
 from repro.core.bandwidth import NetworkTrace
 from repro.core.engine import EngineConfig
 from repro.core.scheduler import ModelProfile
@@ -269,10 +269,12 @@ def tier_profile(base: ModelProfile, tier: str | DeviceTier) -> ModelProfile:
         _TIER_CACHE.move_to_end(key)
         return hit
     s = tier.compute_scale
+    # LatencyModel.scaled keeps this model-agnostic: a LinearProfiler scales
+    # (a, b) — bit-identical to the old inline construction — and a
+    # StepProfiler scales its plateau levels
     prof = dataclasses.replace(
         base,
-        device=profiler.LinearProfiler(base.device.a * s, base.device.b * s,
-                                       base.device.r),
+        device=base.device.scaled(s),
         device_embed_s=base.device_embed_s * s)
     _TIER_CACHE[key] = prof
     while len(_TIER_CACHE) > _TIER_CACHE_MAX:

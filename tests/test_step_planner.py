@@ -1,0 +1,367 @@
+"""Step-aware planner tests: the ``LatencyModel`` protocol (JSON round
+trips, scaling, signatures), the ``StepProfiler`` plateau semantics, the
+``fit_linear`` degenerate-input guard, ``PlannerConfig`` threading, the
+α-snapping lexicographic-optimality property, and bit-exactness pins that
+the linear path reproduces the pre-protocol decisions and fleet stats."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from conftest import small_model_profile as _profile
+
+from repro.core import bandwidth, bucketing, engine, planner, profiler, \
+    pruning, scheduler
+from repro.serving import fleet, simcore, workload
+
+
+# ---------------------------------------------------------------- fit_linear
+
+def test_fit_linear_single_sample_flat_fit():
+    a, b, r = profiler.fit_linear([(128, 0.5)])
+    assert (a, b, r) == (0.0, 0.5, 1.0)
+    m = profiler.LinearProfiler.from_samples([(128, 0.5)])
+    assert m.predict(1) == m.predict(10_000) == 0.5
+
+
+def test_fit_linear_zero_variance_grid_flat_fit():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # polyfit would emit RankWarning
+        a, b, r = profiler.fit_linear([(64, 0.1), (64, 0.3), (64, 0.2)])
+    assert a == 0.0
+    assert b == pytest.approx(0.2)
+    assert np.isfinite(r)
+
+
+def test_fit_linear_empty_raises():
+    with pytest.raises(ValueError):
+        profiler.fit_linear([])
+
+
+# ------------------------------------------------------------- LatencyModel
+
+def test_linear_profiler_json_round_trip():
+    m = profiler.LinearProfiler(1.5e-6, 3e-4, 0.97)
+    m2 = profiler.latency_model_from_json(m.to_json())
+    assert m2 == m
+    assert m2.signature() == m.signature()
+
+
+def test_step_profiler_json_round_trip():
+    m = profiler.StepProfiler((16, 64, 256), (1e-4, 2e-4, 8e-4), 0.9)
+    m2 = profiler.latency_model_from_json(m.to_json())
+    assert m2 == m
+    assert m2.signature() == m.signature()
+    with pytest.raises(ValueError):
+        profiler.latency_model_from_json({"kind": "quadratic"})
+
+
+def test_latency_models_satisfy_protocol():
+    assert isinstance(profiler.LinearProfiler(1e-6, 1e-4),
+                      profiler.LatencyModel)
+    assert isinstance(profiler.StepProfiler((8,), (1e-4,)),
+                      profiler.LatencyModel)
+
+
+def test_step_profiler_plateau_semantics():
+    m = profiler.StepProfiler((8, 16, 32), (1.0, 2.0, 4.0))
+    # constant within a plateau, jumps only past an edge
+    assert m.predict(1) == m.predict(8) == 1.0
+    assert m.predict(9) == m.predict(16) == 2.0
+    assert m.predict(17) == m.predict(32) == 4.0
+    assert m.predict(33) == m.predict(10_000) == 4.0  # clamp past the table
+    # vectorized: shape-preserving on 1-D and 2-D count arrays
+    got = m.predict(np.asarray([1.0, 8.0, 9.0, 33.0]))
+    np.testing.assert_array_equal(got, [1.0, 1.0, 2.0, 4.0])
+    # a float count exactly on an edge stays on that edge's plateau
+    got2d = m.predict(np.asarray([[8.0, 9.0], [32.0, 40.0]]))
+    assert got2d.shape == (2, 2)
+    np.testing.assert_array_equal(got2d, [[1.0, 2.0], [4.0, 4.0]])
+    assert m.predict(np.asarray([32.0]))[0] == 4.0
+
+
+def test_step_profiler_validation():
+    with pytest.raises(ValueError):
+        profiler.StepProfiler((), ())
+    with pytest.raises(ValueError):
+        profiler.StepProfiler((8, 8), (1.0, 2.0))
+    with pytest.raises(ValueError):
+        profiler.StepProfiler((8, 16), (1.0,))
+
+
+def test_step_profiler_from_model_prices_padded_counts():
+    base = profiler.LinearProfiler(2e-6, 1e-4)
+    edges = (16, 64, 145)
+    m = profiler.StepProfiler.from_model(base, edges)
+    for e in edges:
+        assert m.predict(e) == base.predict(float(e))
+    # any in-plateau count is billed at its padded edge
+    assert m.predict(17) == base.predict(64.0)
+    assert m.predict(65) == base.predict(145.0)
+
+
+def test_step_profiler_from_samples_bins_and_falls_back():
+    samples = [(8, 1.0), (12, 3.0), (16, 2.0), (40, 5.0)]
+    m = profiler.StepProfiler.from_samples(samples, edges=(12, 16, 32, 40))
+    assert m.predict(12) == pytest.approx(2.0)   # mean of (8->1.0, 12->3.0)
+    assert m.predict(16) == pytest.approx(2.0)
+    assert m.predict(40) == pytest.approx(5.0)
+    # empty bin (edge 32): linear-fit fallback keeps the model total
+    a, b, _ = profiler.fit_linear(samples)
+    assert m.predict(32) == pytest.approx(a * 32 + b)
+
+
+def test_scaled_is_uniform_for_both_models():
+    lin = profiler.LinearProfiler(2e-6, 1e-4, 0.9)
+    stp = profiler.StepProfiler((8, 32), (1e-4, 4e-4), 0.8)
+    for m in (lin, stp):
+        m2 = m.scaled(2.5)
+        for t in (1, 8, 9, 32, 100):
+            assert m2.predict(t) == pytest.approx(2.5 * m.predict(t), rel=1e-12)
+        assert m2.r == m.r
+
+
+# ------------------------------------------------------------ PlannerConfig
+
+def test_planner_config_json_round_trip():
+    for cfg in (planner.PlannerConfig(),
+                planner.PlannerConfig(t=0.02, k=3),
+                planner.PlannerConfig(alpha_grid=(0.0, 0.1, 0.2))):
+        assert planner.PlannerConfig.from_json(cfg.to_json()) == cfg
+    with pytest.raises(ValueError):
+        planner.PlannerConfig(t=0.0)
+    with pytest.raises(ValueError):
+        planner.PlannerConfig(k=0)
+
+
+def test_planner_config_and_legacy_keywords_hit_same_cache_entry():
+    p = _profile()
+    assert planner.tables_for(p, planner.PlannerConfig()) is \
+        planner.tables_for(p)
+    assert planner.tables_for(p, planner.PlannerConfig(t=0.02, k=4)) is \
+        planner.tables_for(p, t=0.02, k=4)
+    with pytest.raises(TypeError):
+        planner.tables_for(p, planner.PlannerConfig(), t=0.02)
+
+
+def test_engine_config_planner_cfg_overrides_flat_knobs():
+    p = _profile()
+    cfg = planner.PlannerConfig(t=0.02, k=4)
+    eng = engine.JanusEngine(p, engine.EngineConfig(sla_s=0.3,
+                                                    planner_cfg=cfg))
+    assert eng.tables is planner.tables_for(p, cfg)
+    # unset: the flat t/k fields resolve as before
+    eng2 = engine.JanusEngine(p, engine.EngineConfig(sla_s=0.3))
+    assert eng2.tables is planner.tables_for(p)
+
+
+def test_schedule_accepts_planner_config():
+    p = _profile()
+    cfg = planner.PlannerConfig(alpha_grid=(0.0, 0.1, 0.2))
+    d1 = scheduler.schedule(p, 2e6, 0.01, 1e-9, cfg)
+    d2 = scheduler.schedule(p, 2e6, 0.01, 1e-9, alpha_grid=[0.0, 0.1, 0.2])
+    assert (d1.alpha, d1.split, d1.predicted_latency_s, d1.meets_sla,
+            d1.schedule) == \
+        (d2.alpha, d2.split, d2.predicted_latency_s, d2.meets_sla, d2.schedule)
+
+
+# ------------------------------------------------------ step-aware profiles
+
+def _step_profile(n_edges: int = 4):
+    return planner.step_aware_profile(
+        _profile(), bucketing.BucketingConfig(n_edges=n_edges))
+
+
+def test_step_aware_profile_edges_union_of_bucket_table():
+    base = _profile()
+    cfg = bucketing.BucketingConfig(n_edges=3)
+    prof = planner.step_aware_profile(base, cfg)
+    table = bucketing.BucketTable.build_for(
+        base.n_layers, base.x0, planner.default_alpha_grid(
+            base.n_layers, base.x0, 0.01),
+        kind=base.schedule_kind, config=cfg)
+    expected = sorted({e for es in table.edges_by_split.values() for e in es})
+    assert list(prof.cloud.edges) == expected
+    assert isinstance(prof.cloud, profiler.StepProfiler)
+    assert isinstance(prof.device, profiler.LinearProfiler)  # device smooth
+    # cached separately from the smooth profile (signature differs)
+    assert planner.tables_for(prof) is not planner.tables_for(base)
+    assert planner.tables_for(prof) is planner.tables_for(
+        planner.step_aware_profile(base, cfg))
+
+
+def test_step_tables_cloud_columns_are_plateau_priced():
+    """Cloud-only latency at α rows sharing one bucket cell is *identical*
+    (not merely close) — the equality the α-snap rides on."""
+    prof = _step_profile(n_edges=2)
+    tab = planner.tables_for(prof)
+    j0 = int(np.flatnonzero(tab.candidates == 0)[0])  # cloud-only column
+    uniq = np.unique(tab.cloud_s[:, j0])
+    assert len(uniq) < len(tab.alpha_grid), \
+        "plateau pricing must collapse some α rows to identical latency"
+
+
+# ----------------------------------------------- α-snapping (property test)
+
+def _random_step_profile(pseed: int):
+    """Randomized ModelProfile with a step cloud model (mirrors
+    test_planner._random_profile, then snaps the cloud to bucket edges)."""
+    rng = np.random.default_rng(pseed)
+    n = int(rng.integers(2, 33))
+    x0 = int(rng.integers(40, 700))
+    dev_a = 10 ** rng.uniform(-7, -4)
+    dev_b = 10 ** rng.uniform(-5, -3)
+    scale = rng.uniform(0.02, 0.9)
+    prof = scheduler.ModelProfile(
+        n_layers=n, x0=x0,
+        token_bytes=float(rng.integers(64, 2048)),
+        raw_input_bytes=float(rng.integers(10_000, 500_000)),
+        device=profiler.LinearProfiler(dev_a, dev_b),
+        cloud=profiler.LinearProfiler(dev_a * scale, dev_b * scale),
+        device_embed_s=10 ** rng.uniform(-5, -3),
+        cloud_embed_s=10 ** rng.uniform(-6, -4),
+        head_s=10 ** rng.uniform(-6, -4),
+        schedule_kind=["exponential", "linear"][int(rng.integers(2))])
+    n_edges = int(rng.integers(1, 6))
+    return planner.step_aware_profile(prof,
+                                      bucketing.BucketingConfig(n_edges))
+
+
+@given(pseed=st.integers(0, 10**6), bw=st.floats(1e4, 1e9),
+       rtt=st.floats(0.0, 0.1), sla=st.floats(1e-4, 3.0))
+@settings(max_examples=40, deadline=None)
+def test_snapped_decision_never_worse_than_unsnapped(pseed, bw, rtt, sla):
+    """Under a step cloud model, ``decide()``'s plateau-tie resolution is
+    lexicographically optimal in (latency, accuracy): among SLA-feasible
+    cells it returns the maximum-accuracy α (the least-pruned member of any
+    tied plateau); with no feasible cell it returns the global minimum
+    latency at the maximum accuracy among its ties. Any "unsnapped" argmax —
+    any other tie-break over the same latency matrix — is no better."""
+    prof = _random_step_profile(pseed)
+    tab = planner.tables_for(prof)
+    dec = tab.decide(bw, rtt, sla)
+    acc_model = pruning.AccuracyModel()
+    accs = np.asarray([acc_model.accuracy(prof.x0, s) for s in tab.schedules])
+    a_dec = tab.alpha_index(dec.alpha)
+    lat = tab.latency_matrix(bw, rtt)
+    best_lat = lat.min(axis=1)
+    feasible = best_lat <= sla
+    if feasible.any():
+        assert dec.meets_sla
+        assert dec.predicted_latency_s <= sla
+        # no feasible row (snapped or not) has better accuracy
+        assert accs[a_dec] == pytest.approx(accs[feasible].max(), abs=0)
+    else:
+        assert not dec.meets_sla
+        gmin = float(best_lat.min())
+        assert dec.predicted_latency_s == gmin
+        # adversarial unsnapped argmax: the MOST-pruned row achieving the
+        # global min — the snapped choice's accuracy is >= its accuracy
+        ties = np.flatnonzero(best_lat == gmin)
+        assert accs[a_dec] >= accs[ties].max() - 0.0
+        assert a_dec == ties[0], "snap resolves plateau ties to the lowest α"
+
+
+def test_step_decisions_match_reference_loop():
+    """The vectorized planner keeps exact Algorithm-1 parity when the cloud
+    model is a step model (the legacy loop prices through the same
+    ``LatencyModel`` protocol)."""
+    prof = _step_profile()
+    tab = planner.tables_for(prof)
+    for bw in (1e3, 1e5, 5e6, 80e6):
+        for sla in (1e-9, 0.05, 0.3, 10.0):
+            ref = scheduler._reference_schedule(prof, bw, 0.01, sla)
+            dec = tab.decide(bw, 0.01, sla)
+            assert dec.alpha == ref.alpha and dec.split == ref.split
+            assert dec.meets_sla == ref.meets_sla
+            assert dec.predicted_latency_s == pytest.approx(
+                ref.predicted_latency_s, abs=1e-9)
+
+
+# ----------------------------------------- simulation prices the plateaus
+
+def test_simcore_acct_tables_price_step_plateaus_like_engine():
+    """``AcctTables`` under a step profile reproduces the engine's
+    ``account_breakdown`` phases bit-exact — the simulation bills the same
+    plateaus the bucketed execution path runs."""
+    prof = _step_profile()
+    eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=0.3))
+    acct = simcore.AcctTables(eng.tables, eng.acc)
+    tab = eng.tables
+    for ai in (0, len(tab.alpha_grid) // 2, len(tab.alpha_grid) - 1):
+        counts = eng._counts_for(tab.schedules[ai])
+        for j, s in enumerate(tab.candidates):
+            s = int(s)
+            pay = eng._payload_bytes(counts, s)
+            bd = eng.account_breakdown(counts, s, pay, 3.7e6, 0.02)
+            assert bd.device_s == float(acct.dev[ai, j])
+            assert bd.cloud_s == float(acct.cloud[ai, j])
+
+
+def test_simcore_decide_batch_matches_scalar_decide_on_step_tables():
+    prof = _step_profile()
+    eng = engine.JanusEngine(prof, engine.EngineConfig(sla_s=0.3))
+    acct = simcore.AcctTables(eng.tables, eng.acc)
+    rng = np.random.default_rng(7)
+    ests = rng.random(64) * 5e7 + 1e4
+    for sla in (1e-4, 0.3, float("inf")):
+        a_idx, j_idx = acct.decide_batch(ests, 0.0422, sla)
+        for r in (0, 13, 63):
+            d = eng.tables.decide(float(ests[r]), 0.0422, sla)
+            assert d.alpha == float(eng.tables.alpha_grid[a_idx[r]])
+            assert d.split == int(eng.tables.candidates[j_idx[r]])
+
+
+# ------------------------------------------------------- bit-exactness pins
+
+def _tiny_fleet_stats(profile):
+    streams = [
+        fleet.StreamSpec(
+            trace=bandwidth.synthetic_trace("4g", "driving", steps=6,
+                                            seed=si),
+            n_frames=6)
+        for si in range(4)]
+    cfg = engine.EngineConfig(sla_s=0.3, include_scheduler_overhead=False)
+    return fleet.FleetRuntime(profile, cfg, streams).run()
+
+
+def test_linear_model_fleet_stats_bit_exact_through_protocol():
+    """A linear ``LatencyModel`` — including one JSON round-tripped through
+    the protocol — reproduces the fleet simulation exactly: same planner
+    tables instance, float-equal per-frame latencies and aggregate stats."""
+    p = _profile()
+    p2 = dataclasses.replace(
+        p,
+        device=profiler.latency_model_from_json(p.device.to_json()),
+        cloud=profiler.latency_model_from_json(p.cloud.to_json()))
+    assert planner.tables_for(p) is planner.tables_for(p2), \
+        "value-equal linear models must share one tables instance"
+    fs1, fs2 = _tiny_fleet_stats(p), _tiny_fleet_stats(p2)
+    assert [f.latency_s for f in fs1.all_frames] == \
+        [f.latency_s for f in fs2.all_frames]
+    assert [f.alpha for f in fs1.all_frames] == \
+        [f.alpha for f in fs2.all_frames]
+    assert fs1.violation_ratio == fs2.violation_ratio
+    assert fs1.p50_latency_s == fs2.p50_latency_s
+    assert fs1.p99_latency_s == fs2.p99_latency_s
+    assert fs1.avg_accuracy == fs2.avg_accuracy
+
+
+def test_tier_profile_scaled_path_bit_exact():
+    """``tier_profile`` now scales through ``LatencyModel.scaled`` — for the
+    linear fit that must be float-identical to the old inline
+    ``LinearProfiler(a*s, b*s, r)`` construction."""
+    base = _profile()
+    tier = workload.DEVICE_TIERS["phone"]
+    prof = workload.tier_profile(base, "phone")
+    s = tier.compute_scale
+    assert prof.device.a == base.device.a * s
+    assert prof.device.b == base.device.b * s
+    assert prof.device.r == base.device.r
+    assert prof.device_embed_s == base.device_embed_s * s
+    # a step-device profile scales its plateau levels the same way
+    stepped = dataclasses.replace(
+        base, device=profiler.StepProfiler.from_model(base.device, (16, 145)))
+    prof2 = workload.tier_profile(stepped, "phone")
+    assert prof2.device.levels == tuple(v * s for v in stepped.device.levels)
